@@ -1,0 +1,36 @@
+"""Shared helpers for the benchmark suite."""
+from __future__ import annotations
+
+import functools
+import sys
+import time
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+
+from repro.configs import get_config  # noqa: E402
+from repro.core.compile import CompileOptions, megakernelize  # noqa: E402
+from repro.core.decompose import DecomposeConfig  # noqa: E402
+from repro.core.lowering import build_decode_graph  # noqa: E402
+
+RUNS = Path(__file__).resolve().parent.parent / "runs"
+
+
+@functools.lru_cache(maxsize=32)
+def compiled_decode(arch: str, batch: int = 1, seq: int = 2048,
+                    tp: int = 1, latency_aware: bool = True,
+                    fusion: bool = True):
+    cfg = get_config(arch)
+    g = build_decode_graph(cfg, batch, seq, tp=tp)
+    opts = CompileOptions(
+        decompose=DecomposeConfig(),
+        latency_aware_schedule=latency_aware,
+        event_fusion=fusion)
+    t0 = time.time()
+    out = megakernelize(g, opts)
+    out.stats["compile_wall_s"] = time.time() - t0
+    return out
+
+
+def emit(name: str, us_per_call: float, derived: str = "") -> None:
+    print(f"{name},{us_per_call:.3f},{derived}")

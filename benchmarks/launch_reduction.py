@@ -1,0 +1,38 @@
+"""§6.6 reproduction: kernel-launch reduction.
+
+The paper: Qwen3-8B issues 293 kernel launches per token; at 3.8 µs
+(eager) that's 1.1 ms/token, 0.8 µs with CUDA Graphs = 0.2 ms/token; MPK
+is one launch and its in-kernel scheduler costs 0.28% of runtime.  We
+count operators in our compiled graphs and price the same overheads; the
+MPK analogue's dispatch cost is the per-task descriptor-decode overhead
+from the runtime model."""
+from __future__ import annotations
+
+from repro.core.runtime_sim import SimConfig, simulate
+
+from .common import compiled_decode, emit
+
+
+def main() -> None:
+    print("# Kernel-launch reduction (per decode token)")
+    for model in ("qwen3-1.7b", "qwen3-8b", "qwen3-30b-a3b"):
+        c = compiled_decode(model, batch=1, seq=2048)
+        n_ops = len(c.graph.ops)
+        emit(f"launch/{model}/ops", n_ops, "kernel launches per token "
+             f"(paper qwen3-8b: 293)")
+        emit(f"launch/{model}/eager_overhead_us", n_ops * 3.8,
+             "3.8us per launch")
+        emit(f"launch/{model}/cudagraph_overhead_us", n_ops * 0.8,
+             "0.8us per launch")
+        mpk = simulate(c, SimConfig(mode="mpk"))
+        # scheduler work = JIT dispatches only (AOT is pre-enqueued, §5.2)
+        n_jit = sum(1 for t in c.tg.tasks.values()
+                    if t.launch_mode == "jit" and not t.is_dummy)
+        sched = n_jit * 0.6e-6 / 16   # spread over 16 scheduler warps
+        emit(f"launch/{model}/mpk_launches", 1.0,
+             f"scheduler_frac={sched / mpk.makespan * 100:.2f}% "
+             "(paper: 0.28%; ours is finer-grained at batch 1)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,56 @@
+"""§Perf hillclimbing log: baseline vs variant roofline terms for the
+three chosen cells (reads runs/dryrun baselines + runs/perf variants)."""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from .common import RUNS, emit
+
+
+def _load(path: Path):
+    return json.loads(path.read_text()) if path.exists() else None
+
+
+def main() -> None:
+    print("# Perf iterations (hypothesis -> change -> before/after)")
+    cells = [
+        ("qwen1.5-110b", "train_4k", ["nosp", "nosp_mb8", "puredp",
+                                      "puredp_mb4", "nosp_mb16"]),
+        ("deepseek-7b", "decode_32k", ["kv8"]),
+        ("musicgen-large", "decode_32k", ["kv8"]),
+        ("jamba-1.5-large-398b", "decode_32k",
+         ["masked", "qrep", "qrep_masked_moe2d", "qrep_masked_moe2d_kv8"]),
+    ]
+    lines = []
+    for arch, shape, tags in cells:
+        base = _load(RUNS / "dryrun" / f"{arch}_{shape}_pod.json")
+        if not base or base.get("status") != "ok":
+            emit(f"perf/{arch}/{shape}/baseline", 0, "missing")
+            continue
+        rb = base["roofline"]
+        emit(f"perf/{arch}/{shape}/baseline_us",
+             rb["roofline_bound_s"] * 1e6,
+             f"dom={rb['dominant']} cf={rb['compute_fraction_of_bound']:.3f} "
+             f"fits={base.get('fits_hbm')} "
+             f"res={base.get('resident_bytes_per_device', 0) / 1e9:.1f}GB")
+        for tag in tags:
+            v = _load(RUNS / "perf" / f"{arch}_{shape}_pod_{tag}.json")
+            if not v or v.get("status") != "ok":
+                emit(f"perf/{arch}/{shape}/{tag}", 0,
+                     "missing" if not v else v.get("error", "")[:60])
+                continue
+            rv = v["roofline"]
+            gain = rb["roofline_bound_s"] / max(rv["roofline_bound_s"],
+                                                1e-12)
+            emit(f"perf/{arch}/{shape}/{tag}_us",
+                 rv["roofline_bound_s"] * 1e6,
+                 f"dom={rv['dominant']} "
+                 f"cf={rv['compute_fraction_of_bound']:.3f} "
+                 f"fits={v.get('fits_hbm')} "
+                 f"res={v.get('resident_bytes_per_device', 0) / 1e9:.1f}GB "
+                 f"gain={gain:.2f}x")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,55 @@
+"""Roofline table from the committed dry-run sweep (runs/dryrun/*.json):
+per (arch × shape × mesh) the three terms, dominant bottleneck, useful-
+FLOP ratio and HBM fit.  Also writes runs/roofline.md for EXPERIMENTS.md."""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from .common import RUNS, emit
+
+
+def rows():
+    run_dir = RUNS / "dryrun"
+    recs = []
+    for p in sorted(run_dir.glob("*.json")):
+        recs.append(json.loads(p.read_text()))
+    return sorted(recs, key=lambda r: (r["arch"], r["shape"], r["mesh"]))
+
+
+def main() -> None:
+    print("# Roofline table (from dry-run compiled artifacts)")
+    recs = rows()
+    if not recs:
+        print("roofline/none,0,run scripts/dryrun_sweep.sh first")
+        return
+    md = ["| arch | shape | mesh | compute ms | memory ms | collective ms "
+          "| dominant | useful | fits |",
+          "|---|---|---|---|---|---|---|---|---|"]
+    for r in recs:
+        tag = f"{r['arch']}/{r['shape']}/{r['mesh']}"
+        if r["status"] == "skipped":
+            md.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | — | — "
+                      f"| — | skipped ({r['reason'].split(': ')[-1]}) | — "
+                      "| — |")
+            continue
+        if r["status"] != "ok":
+            emit(f"roofline/{tag}/ERROR", 0, r.get("error", "")[:60])
+            continue
+        rf = r["roofline"]
+        emit(f"roofline/{tag}/bound_us", rf["roofline_bound_s"] * 1e6,
+             f"dom={rf['dominant']} useful={rf.get('useful_flop_ratio', 0):.2f} "
+             f"fits={r.get('fits_hbm')}")
+        md.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+            f"| {rf['compute_s'] * 1e3:.2f} | {rf['memory_s'] * 1e3:.2f} "
+            f"| {rf['collective_s'] * 1e3:.2f} | **{rf['dominant']}** "
+            f"| {rf.get('useful_flop_ratio', 0):.2f} "
+            f"| {r.get('fits_hbm')} |")
+    out = RUNS / "roofline.md"
+    out.write_text("\n".join(md) + "\n")
+    emit("roofline/table_rows", len(md) - 2, f"written to {out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,70 @@
+"""Fault-tolerant training walkthrough: heartbeats, straggler detection,
+a simulated host failure, and elastic restore of a live checkpoint onto a
+smaller mesh.
+
+    PYTHONPATH=src python examples/fault_tolerant_training.py
+"""
+import pathlib
+import sys
+import tempfile
+
+sys.path.insert(0, str(pathlib.Path(__file__).parent.parent / "src"))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.ckpt import HeartbeatMonitor, elastic_restore, save_checkpoint
+from repro.configs import get_config
+from repro.data import SyntheticLMData
+from repro.models import init_params
+from repro.training import adamw_init, make_train_step
+
+cfg = get_config("deepseek-7b").reduced()
+params = init_params(cfg, jax.random.PRNGKey(0), dtype=jnp.float32)
+opt = adamw_init(params)
+data = SyntheticLMData(cfg.vocab, 4, 32, seed=0)
+step_fn = jax.jit(make_train_step(cfg, lr=3e-3), donate_argnums=(0, 1))
+
+ckpt_dir = tempfile.mkdtemp(prefix="ft_ckpt_")
+clock = [0.0]
+mon = HeartbeatMonitor([f"host{i}" for i in range(4)], timeout=30.0,
+                       clock=lambda: clock[0])
+
+for step in range(12):
+    batch = {k: jnp.asarray(v) for k, v in data.batch_at(step).items()}
+    params, opt, m = step_fn(params, opt, batch)
+    clock[0] += 1.0
+    for h in range(4):
+        if not (h == 3 and step >= 6):         # host3 dies at step 6
+            mon.beat(f"host{h}", 1.0 if h else 1.1)
+    if step == 5:
+        save_checkpoint(ckpt_dir, step + 1, {"params": params, "opt": opt})
+        print(f"[ft] committed checkpoint at step {step + 1}, "
+              f"loss={float(m['loss']):.3f}")
+
+clock[0] = 40.0   # host3 last beat at t=6 (>30s silent); others at t=12
+dead = mon.dead()
+print(f"[ft] heartbeat monitor: dead={dead}, healthy={mon.healthy()}")
+assert dead == ["host3"]
+
+# elastic restore: rebuild the mesh from surviving hosts and reshard
+def make_mesh(n):
+    return Mesh(np.array(jax.devices()[:1]).reshape(1, 1),
+                ("data", "model"))
+
+def spec_fn(mesh):
+    rep = NamedSharding(mesh, P())
+    return jax.tree.map(lambda _: rep, {"params": params, "opt": opt})
+
+state, got_step, mesh = elastic_restore(
+    ckpt_dir, make_mesh=make_mesh, spec_fn=spec_fn, n_healthy_devices=3)
+print(f"[ft] elastically restored step {got_step} onto mesh "
+      f"{dict(mesh.shape)}; resuming from the data pipeline's step counter")
+
+batch = {k: jnp.asarray(v) for k, v in data.batch_at(got_step).items()}
+_, _, m = jax.jit(make_train_step(cfg, lr=3e-3))(
+    state["params"], state["opt"], batch)
+print(f"[ft] first resumed step loss={float(m['loss']):.3f} — "
+      "deterministic resume (batches are pure functions of the step)")

@@ -1,0 +1,23 @@
+"""End-to-end training driver: train a small LM for a few hundred steps
+with the full substrate (synthetic data, AdamW, remat, checkpoints).
+
+    PYTHONPATH=src python examples/train_lm.py [--steps 200]
+
+Defaults are CPU-sized; pass ``--arch qwen3-1.7b`` (or any registry name)
+on real hardware.  Crash-safe: re-running resumes from the last committed
+checkpoint.
+"""
+import pathlib
+import subprocess
+import sys
+
+ROOT = pathlib.Path(__file__).parent.parent
+args = sys.argv[1:] or ["--steps", "200"]
+sys.exit(subprocess.call(
+    [sys.executable, "-m", "repro.launch.train",
+     "--arch", "deepseek-7b-reduced", "--batch", "8", "--seq", "64",
+     "--ckpt-dir", "runs/train_lm_ckpt", "--ckpt-every", "50",
+     *args],
+    env={"PYTHONPATH": str(ROOT / "src"), "PATH": "/usr/bin:/bin",
+         "HOME": str(pathlib.Path.home())},
+    cwd=str(ROOT)))

@@ -1,0 +1,5 @@
+from .checkpoint import save_checkpoint, restore_checkpoint, latest_step
+from .fault_tolerance import HeartbeatMonitor, elastic_restore
+
+__all__ = ["save_checkpoint", "restore_checkpoint", "latest_step",
+           "HeartbeatMonitor", "elastic_restore"]

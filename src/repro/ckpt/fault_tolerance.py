@@ -1,0 +1,81 @@
+"""Fault tolerance: heartbeat/straggler detection + elastic re-meshing.
+
+At 1000+ node scale the failure model is: a host stops heartbeating (hard
+failure) or its step times drift (straggler).  The monitor detects both;
+recovery = restore the latest committed checkpoint onto a rebuilt mesh of
+the surviving hosts (``elastic_restore``) and resume from the data
+pipeline's step counter (exact, because batches are pure functions of the
+step — see data/pipeline.py).
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict, List, Optional, Sequence
+
+import jax
+import numpy as np
+
+from .checkpoint import restore_checkpoint
+
+__all__ = ["HeartbeatMonitor", "elastic_restore"]
+
+
+class HeartbeatMonitor:
+    """Tracks per-host heartbeats + step durations.
+
+    ``dead()`` — hosts silent for > ``timeout`` seconds.
+    ``stragglers()`` — hosts whose EMA step time exceeds
+    ``straggler_factor`` × the fleet median (the paper's JIT-launch
+    motivation at cluster granularity: reassign their shards/work).
+    """
+
+    def __init__(self, hosts: Sequence[str], *, timeout: float = 60.0,
+                 straggler_factor: float = 1.5, ema: float = 0.9,
+                 clock: Callable[[], float] = time.monotonic):
+        self.clock = clock
+        self.timeout = timeout
+        self.factor = straggler_factor
+        self.ema = ema
+        self.last_seen: Dict[str, float] = {h: clock() for h in hosts}
+        self.step_time: Dict[str, Optional[float]] = {h: None for h in hosts}
+
+    def beat(self, host: str, step_duration: Optional[float] = None) -> None:
+        self.last_seen[host] = self.clock()
+        if step_duration is not None:
+            prev = self.step_time[host]
+            self.step_time[host] = (step_duration if prev is None else
+                                    self.ema * prev
+                                    + (1 - self.ema) * step_duration)
+
+    def dead(self) -> List[str]:
+        now = self.clock()
+        return [h for h, t in self.last_seen.items()
+                if now - t > self.timeout]
+
+    def stragglers(self) -> List[str]:
+        times = [t for t in self.step_time.values() if t is not None]
+        if len(times) < 2:
+            return []
+        median = float(np.median(times))
+        return [h for h, t in self.step_time.items()
+                if t is not None and t > self.factor * median]
+
+    def healthy(self) -> List[str]:
+        bad = set(self.dead())
+        return [h for h in self.last_seen if h not in bad]
+
+
+def elastic_restore(ckpt_dir, *, make_mesh: Callable[[int], "jax.sharding.Mesh"],
+                    spec_fn: Callable[["jax.sharding.Mesh"], dict],
+                    n_healthy_devices: int, step: Optional[int] = None):
+    """Restore the latest checkpoint onto a mesh rebuilt from the healthy
+    device count.
+
+    ``make_mesh(n)`` builds the largest valid mesh ≤ n devices;
+    ``spec_fn(mesh)`` returns the sharding tree for the checkpoint
+    structure on that mesh.  Returns (tree, step, mesh).
+    """
+    mesh = make_mesh(n_healthy_devices)
+    shardings = spec_fn(mesh)
+    tree, got_step = restore_checkpoint(ckpt_dir, step, shardings=shardings)
+    return tree, got_step, mesh

@@ -1,0 +1,22 @@
+"""granite-moe-1b-a400m [moe] — 32 experts top-8, d_ff(expert)=512
+[hf:ibm-granite/granite-3.0-1b-a400m-base; hf]."""
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="granite-moe-1b-a400m",
+    family="moe",
+    n_layers=24,
+    d_model=1024,
+    n_heads=16,
+    n_kv_heads=8,
+    head_dim=64,
+    d_ff=512,              # expert width (all FFNs are MoE)
+    vocab=49155,
+    n_experts=32,
+    top_k=8,
+    moe_d_ff=512,
+    moe_period=1,
+    activation="silu",
+    tie_embeddings=True,
+    source="hf:ibm-granite/granite-3.0-1b-a400m-base",
+)

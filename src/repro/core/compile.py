@@ -1,0 +1,210 @@
+"""End-to-end MPK compilation driver (paper §4 + Figure 5).
+
+computation graph → decompose → dependency analysis → hybrid-launch
+classification → event fusion → start/final events → normalization →
+linearization (latency-aware) → ``CompiledTGraph``.
+
+The ``CompiledTGraph`` carries everything downstream consumers need: the
+linearized schedule, range-encoded event table, per-tensor workspace layout
+(for the megakernel's unified activation buffer), and per-stage statistics
+reproducing the paper's Table 2.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from .decompose import DecomposeConfig, decompose
+from .deps import analyze_dependencies
+from .fusion import fuse_events
+from .graph import ComputationGraph, OpKind
+from .linearize import LinearizedTGraph, linearize
+from .normalize import normalize
+from .schedule import (
+    count_pipeline_stalls,
+    latency_aware_linearize,
+    overlap_statistics,
+)
+from .tgraph import TGraph
+
+__all__ = ["CompileOptions", "CompiledTGraph", "megakernelize"]
+
+
+@dataclasses.dataclass
+class CompileOptions:
+    decompose: DecomposeConfig = dataclasses.field(default_factory=DecomposeConfig)
+    #: use the latency-aware scheduler (beyond-paper); False = plain FIFO
+    #: Algorithm 1, which is the paper-faithful baseline
+    latency_aware_schedule: bool = True
+    #: apply event fusion (ablatable — paper Table 2 "Fusion" column)
+    event_fusion: bool = True
+    #: workspace alignment in elements
+    workspace_align: int = 128
+
+
+@dataclasses.dataclass
+class CompiledTGraph:
+    graph: ComputationGraph
+    tg: TGraph
+    lin: LinearizedTGraph
+    #: tensor -> (offset, size) in the flat activation workspace; graph inputs
+    #: are *not* in the workspace (they are passed as separate buffers)
+    workspace_layout: Dict[str, Tuple[int, int]]
+    workspace_size: int
+    stats: Dict[str, Any]
+
+    # ------------------------------------------------------------------
+    @property
+    def order(self) -> List[int]:
+        return self.lin.order
+
+    def event_table(self) -> np.ndarray:
+        """(num_events, 3) int32: [num_triggers, first_task, last_task]."""
+        eids = sorted(self.lin.event_ranges)
+        out = np.zeros((len(eids), 3), np.int32)
+        for row, eid in enumerate(eids):
+            out[row] = self.lin.event_ranges[eid]
+        return out
+
+    def table2_row(self) -> Dict[str, Any]:
+        """The paper's Table-2 columns for this graph."""
+        s = self.stats
+        return {
+            "model": self.graph.name,
+            "ops": s["num_ops"],
+            "tasks_per_op": round(s["tasks_per_op"], 1),
+            "events": s["events_post_fusion"],
+            "fusion_x": round(s["fusion_reduction"], 1),
+            "lin_x": round(s["lin_reduction"], 1),
+            "pair_dependencies": s["pair_dependencies"],
+            "dummy_tasks": s.get("dummy_tasks_added", 0),
+        }
+
+
+# --------------------------------------------------------------------------
+# Hybrid JIT/AOT launch classification (paper §5.2).
+# --------------------------------------------------------------------------
+
+
+def _classify_launch_modes(g: ComputationGraph, tg: TGraph) -> None:
+    """Operators with data-dependent durations are JIT; downstream operators
+    remain JIT until a *global barrier* (an event triggered by all tasks of
+    every predecessor op), after which operators revert to AOT."""
+    per_op_tasks: Dict[int, List[int]] = tg.stats["per_op_tasks"]
+    # op-level successor map
+    succ: Dict[int, set] = {op.op_id: set() for op in g.ops}
+    for prod, cons, _t in g.edges():
+        if prod != cons:
+            succ[prod].add(cons)
+
+    def is_barrier(op_id: int) -> bool:
+        """All tasks of every predecessor op funnel into the dependent events
+        of this op's tasks — accumulated imbalance is flushed here."""
+        tasks = per_op_tasks[op_id]
+        dep_in: set = set()
+        for tid in tasks:
+            for eid in tg.tasks[tid].dependent_events:
+                dep_in |= tg.events[eid].in_tasks
+        preds = {
+            g.producer[t]
+            for tid in tasks
+            for t in g.op(tg.tasks[tid].op_id).inputs
+            if t in g.producer
+        }
+        return all(set(per_op_tasks[p]) <= dep_in for p in preds) and len(tasks) == 1
+
+    jit_ops: set = set()
+    frontier = [op.op_id for op in g.ops if op.kind in OpKind.DATA_DEPENDENT_KINDS]
+    jit_ops.update(frontier)
+    while frontier:
+        nxt: List[int] = []
+        for oid in frontier:
+            for m in succ[oid]:
+                if m in jit_ops:
+                    continue
+                if is_barrier(m):
+                    continue  # barrier flushes imbalance -> downstream is AOT
+                jit_ops.add(m)
+                nxt.append(m)
+        frontier = nxt
+    for op in g.ops:
+        op.launch_mode = "jit" if op.op_id in jit_ops else "aot"
+    for t in tg.tasks.values():
+        if t.op_id >= 0:
+            t.launch_mode = g.op(t.op_id).launch_mode
+    tg.stats["jit_ops"] = len(jit_ops)
+    tg.stats["aot_ops"] = len(g.ops) - len(jit_ops)
+
+
+# --------------------------------------------------------------------------
+
+
+def _add_start_final_events(tg: TGraph) -> None:
+    """Every tGraph begins with a designated start event (paper §5.1) that
+    launches all source tasks, and ends with a final event triggered by all
+    sink tasks (used by the runtime to detect step completion)."""
+    start = tg.new_event()
+    final = tg.new_event()
+    for t in tg.tasks.values():
+        if not t.dependent_events and t.task_id not in start.out_tasks:
+            tg.add_dependent(start, t)
+        if not t.triggering_events and t.task_id not in final.in_tasks:
+            tg.add_trigger(t, final)
+    tg.stats["start_event"] = start.event_id
+    tg.stats["final_event"] = final.event_id
+
+
+def _pack_workspace(
+    g: ComputationGraph, align: int
+) -> Tuple[Dict[str, Tuple[int, int]], int]:
+    """Assign every non-input tensor an offset in one flat workspace buffer.
+
+    A simple bump allocator is used (tensor lifetimes across a decode step are
+    nearly program-long because the Pallas pipeline may still be prefetching);
+    liveness-based reuse is a recorded future optimization.
+    """
+    layout: Dict[str, Tuple[int, int]] = {}
+    off = 0
+    inputs = set(g.inputs)
+    for name, spec in g.tensors.items():
+        if name in inputs:
+            continue
+        size = spec.size
+        layout[name] = (off, size)
+        off += (size + align - 1) // align * align
+    return layout, off
+
+
+def megakernelize(
+    g: ComputationGraph, options: Optional[CompileOptions] = None
+) -> CompiledTGraph:
+    """The MPK compiler: computation graph → compiled SM-level tGraph."""
+    opts = options or CompileOptions()
+    g.validate()
+
+    tg = decompose(g, opts.decompose)
+    analyze_dependencies(g, tg)
+    _classify_launch_modes(g, tg)
+    if opts.event_fusion:
+        fuse_events(tg)
+    else:
+        tg.stats["events_post_fusion"] = tg.num_events()
+        tg.stats["fusion_reduction"] = 1.0
+    _add_start_final_events(tg)
+    normalize(tg)
+    if opts.latency_aware_schedule:
+        lin = latency_aware_linearize(tg)
+    else:
+        lin = linearize(tg)
+
+    layout, ws_size = _pack_workspace(g, opts.workspace_align)
+
+    stats = dict(tg.stats)
+    stats.pop("per_op_tasks", None)
+    stats["pipeline_stalls"] = count_pipeline_stalls(lin)
+    stats.update(overlap_statistics(lin))
+    stats["workspace_elements"] = ws_size
+    compiled = CompiledTGraph(g, tg, lin, layout, ws_size, stats)
+    return compiled

@@ -1,0 +1,342 @@
+"""Lowering: ModelConfig → kernel-level decode-step ComputationGraph.
+
+This is the *input* side of the MPK compiler (paper Fig. 5a): the decode
+step of any assigned architecture becomes an operator DAG that
+``core.compile.megakernelize`` lowers to an SM-level tGraph.  The graph's
+tensor names double as binding keys: ``decode_bindings`` maps a real
+parameter tree (numpy) onto them so the tGraph interpreter and the Pallas
+megakernel can execute the compiled graph against the JAX model oracle.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import numpy as np
+
+from ..models.lm import block_structure
+from .graph import ComputationGraph, OpKind
+
+__all__ = ["build_decode_graph", "decode_bindings"]
+
+
+def build_decode_graph(
+    cfg,
+    batch: int,
+    max_seq: int,
+    *,
+    tp: int = 1,
+    name: Optional[str] = None,
+) -> ComputationGraph:
+    """One decode step (one new token per request) as an operator graph.
+
+    ``tp > 1`` inserts AllReduce ops after attention/FFN output projections
+    (paper §6.5 — users specify tensor parallelism by inserting AllReduce);
+    operator shapes stay global (the graph models one shard's schedule).
+    """
+    g = ComputationGraph(name or f"{cfg.name}-decode-b{batch}")
+    d, hd = cfg.d_model, cfg.hd
+    qd, kvd = cfg.n_heads * hd, cfg.n_kv_heads * hd
+    b = batch
+
+    # ---- graph inputs ----
+    if cfg.embed_input:
+        g.add_tensor("h0", (b, d), is_input=True)
+    else:
+        g.add_tensor("tokens", (b,), "int32", is_input=True)
+        g.add_tensor("embed", (cfg.vocab, d), is_input=True)
+    pos_shape = (b, 3) if cfg.mrope_sections is not None else (b,)
+    if any(cfg.layer_kind(i) == "attn" for i in range(cfg.n_layers)):
+        g.add_tensor("positions", pos_shape, "int32", is_input=True)
+    g.add_tensor("seq_lens", (b,), "int32", is_input=True)
+    g.add_tensor("live_lens", (b,), "int32", is_input=True)  # seq_lens + 1
+
+    if cfg.embed_input:
+        h = "h0"
+    else:
+        g.add_tensor("h0", (b, d))
+        g.add_op(OpKind.EMBED_LOOKUP, ["tokens", "embed"], ["h0"])
+        h = "h0"
+    if cfg.gemma_norm:  # gemma scales embeddings by sqrt(d_model)
+        g.add_tensor("h0s", (b, d))
+        g.add_op(OpKind.ELEMENTWISE, [h], ["h0s"], scale=float(d) ** 0.5)
+        h = "h0s"
+
+    mrope = (tuple(cfg.mrope_sections)
+             if cfg.mrope_sections is not None else None)
+
+    def matmul(x: str, w: str, out: str, out_cols: int, *, bias: str = "",
+               w_shape=None, activation=None) -> str:
+        g.add_tensor(w, w_shape or (g.spec(x).shape[-1], out_cols),
+                     is_input=True)
+        ins = [x, w]
+        if bias:
+            g.add_tensor(bias, (out_cols,), is_input=True)
+            ins.append(bias)
+        g.add_tensor(out, (b, out_cols))
+        kw = {"activation": activation} if activation else {}
+        g.add_op(OpKind.MATMUL, ins, [out], **kw)
+        return out
+
+    for i in range(cfg.n_layers):
+        L = f"L{i}"
+        kind = cfg.layer_kind(i)
+        if kind == "attn":
+            g.add_tensor(f"{L}.ln_w", (d,), is_input=True)
+            g.add_tensor(f"{L}.x", (b, d))
+            g.add_op(OpKind.RMSNORM, [h, f"{L}.ln_w"], [f"{L}.x"],
+                     eps=cfg.norm_eps, gemma_style=cfg.gemma_norm)
+            x = f"{L}.x"
+            bq = f"{L}.bq" if cfg.qkv_bias else ""
+            bk = f"{L}.bk" if cfg.qkv_bias else ""
+            bv = f"{L}.bv" if cfg.qkv_bias else ""
+            q = matmul(x, f"{L}.wq", f"{L}.q", qd, bias=bq)
+            k = matmul(x, f"{L}.wk", f"{L}.k", kvd, bias=bk)
+            v = matmul(x, f"{L}.wv", f"{L}.v", kvd, bias=bv)
+            # RoPE (head-aligned tiles)
+            g.add_tensor(f"{L}.qr", (b, qd))
+            g.add_op(OpKind.ROPE, [q, "positions"], [f"{L}.qr"],
+                     head_dim=hd, theta=cfg.rope_theta,
+                     mrope_sections=mrope, col_align=hd)
+            g.add_tensor(f"{L}.kr", (b, kvd))
+            g.add_op(OpKind.ROPE, [k, "positions"], [f"{L}.kr"],
+                     head_dim=hd, theta=cfg.rope_theta,
+                     mrope_sections=mrope, col_align=hd)
+            # KV-cache update, then attention over the updated cache
+            for cname, new in ((f"{L}.k_cache", f"{L}.kr"),
+                               (f"{L}.v_cache", v)):
+                g.add_tensor(cname, (b, max_seq, kvd), is_input=True)
+                g.add_tensor(cname + "2", (b, max_seq, kvd))
+                g.add_op(OpKind.CACHE_UPDATE, [cname, new, "seq_lens"],
+                         [cname + "2"], col_align=hd)
+                g.mark_output(cname + "2")
+            g.add_tensor(f"{L}.attn", (b, qd))
+            g.add_op(
+                OpKind.ATTENTION_DECODE,
+                [f"{L}.qr", f"{L}.k_cache2", f"{L}.v_cache2", "live_lens"],
+                [f"{L}.attn"], head_dim=hd, q_per_kv=cfg.q_per_kv,
+                col_align=hd * cfg.q_per_kv)
+            o = matmul(f"{L}.attn", f"{L}.wo", f"{L}.o", d)
+            if tp > 1:
+                g.add_tensor(f"{L}.o_ar", (b, d))
+                g.add_op(OpKind.ALLREDUCE, [o], [f"{L}.o_ar"],
+                         mesh_axis="model", tp=tp)
+                o = f"{L}.o_ar"
+            g.add_tensor(f"{L}.h", (b, d))
+            g.add_op(OpKind.RESIDUAL_ADD, [h, o], [f"{L}.h"])
+            h = f"{L}.h"
+        else:  # ssm mixer
+            din, nh = cfg.d_inner, cfg.ssm_nheads
+            gn = cfg.ssm_ngroups * cfg.ssm_state
+            w = cfg.ssm_conv
+            g.add_tensor(f"{L}.ln_w", (d,), is_input=True)
+            g.add_tensor(f"{L}.x", (b, d))
+            g.add_op(OpKind.RMSNORM, [h, f"{L}.ln_w"], [f"{L}.x"],
+                     eps=cfg.norm_eps, gemma_style=cfg.gemma_norm)
+            x = f"{L}.x"
+            z = matmul(x, f"{L}.zproj", f"{L}.z", din)
+            xp = matmul(x, f"{L}.xproj", f"{L}.xp", din)
+            bp = matmul(x, f"{L}.bproj", f"{L}.bp", gn)
+            cp = matmul(x, f"{L}.cproj", f"{L}.cp", gn)
+            dt = matmul(x, f"{L}.dtproj", f"{L}.dt", nh,
+                        bias=f"{L}.dt_bias")
+            conv_outs = {}
+            for tag, src, width in (("x", xp, din), ("b", bp, gn),
+                                    ("c", cp, gn)):
+                g.add_tensor(f"{L}.conv_{tag}_state", (b, w, width),
+                             is_input=True)
+                g.add_tensor(f"{L}.conv_w{tag}", (w, width), is_input=True)
+                g.add_tensor(f"{L}.conv_b{tag}", (width,), is_input=True)
+                g.add_tensor(f"{L}.conv_{tag}", (b, width))
+                g.add_tensor(f"{L}.conv_{tag}_state2", (b, w, width))
+                g.add_op(
+                    OpKind.CONV1D_UPDATE,
+                    [src, f"{L}.conv_{tag}_state", f"{L}.conv_w{tag}",
+                     f"{L}.conv_b{tag}"],
+                    [f"{L}.conv_{tag}", f"{L}.conv_{tag}_state2"],
+                    activation="silu")
+                g.mark_output(f"{L}.conv_{tag}_state2")
+                conv_outs[tag] = f"{L}.conv_{tag}"
+            g.add_tensor(f"{L}.ssm_state", (b, nh, cfg.ssm_head_dim,
+                                            cfg.ssm_state), is_input=True)
+            g.add_tensor(f"{L}.A_log", (nh,), is_input=True)
+            g.add_tensor(f"{L}.D_skip", (nh,), is_input=True)
+            g.add_tensor(f"{L}.y", (b, din))
+            g.add_tensor(f"{L}.ssm_state2", (b, nh, cfg.ssm_head_dim,
+                                             cfg.ssm_state))
+            g.add_op(
+                OpKind.SSM_UPDATE,
+                [conv_outs["x"], f"{L}.ssm_state", dt, f"{L}.A_log",
+                 conv_outs["b"], conv_outs["c"], f"{L}.D_skip"],
+                [f"{L}.y", f"{L}.ssm_state2"],
+                head_dim=cfg.ssm_head_dim, col_align=cfg.ssm_head_dim)
+            g.mark_output(f"{L}.ssm_state2")
+            g.add_tensor(f"{L}.gated", (b, din))
+            g.add_op(OpKind.GLU_MUL, [z, f"{L}.y"], [f"{L}.gated"],
+                     activation="silu")
+            g.add_tensor(f"{L}.gnorm_w", (din,), is_input=True)
+            g.add_tensor(f"{L}.gn", (b, din))
+            g.add_op(OpKind.RMSNORM, [f"{L}.gated", f"{L}.gnorm_w"],
+                     [f"{L}.gn"], eps=cfg.norm_eps)
+            o = matmul(f"{L}.gn", f"{L}.out_proj", f"{L}.o", d)
+            if tp > 1:
+                g.add_tensor(f"{L}.o_ar", (b, d))
+                g.add_op(OpKind.ALLREDUCE, [o], [f"{L}.o_ar"],
+                         mesh_axis="model", tp=tp)
+                o = f"{L}.o_ar"
+            g.add_tensor(f"{L}.h", (b, d))
+            g.add_op(OpKind.RESIDUAL_ADD, [h, o], [f"{L}.h"])
+            h = f"{L}.h"
+
+        # ---- FFN ----
+        ffn = cfg.ffn_kind(i)
+        if ffn == "none":
+            continue
+        g.add_tensor(f"{L}.ln2_w", (d,), is_input=True)
+        g.add_tensor(f"{L}.x2", (b, d))
+        g.add_op(OpKind.RMSNORM, [h, f"{L}.ln2_w"], [f"{L}.x2"],
+                 eps=cfg.norm_eps, gemma_style=cfg.gemma_norm)
+        x = f"{L}.x2"
+        if ffn == "mlp":
+            f = cfg.d_ff
+            gate = matmul(x, f"{L}.wi_gate", f"{L}.gate", f)
+            up = matmul(x, f"{L}.wi_up", f"{L}.up", f)
+            g.add_tensor(f"{L}.glu", (b, f))
+            g.add_op(OpKind.GLU_MUL, [gate, up], [f"{L}.glu"],
+                     activation=cfg.activation)
+            y = matmul(f"{L}.glu", f"{L}.wo2", f"{L}.ffn", d)
+        else:  # moe
+            e, fe = cfg.n_experts, (cfg.moe_d_ff or cfg.d_ff)
+            logits = matmul(x, f"{L}.router_w", f"{L}.router_logits", e)
+            g.add_tensor(f"{L}.router", (b, e))
+            g.add_op(OpKind.SOFTMAX_TOPK, [logits], [f"{L}.router"],
+                     top_k=cfg.top_k)
+            g.add_tensor(f"{L}.moe_w1", (e, d, 2, fe), is_input=True)
+            g.add_tensor(f"{L}.eh", (e, b, fe))
+            g.add_op(OpKind.MOE_GATHER_GEMM,
+                     [x, f"{L}.router", f"{L}.moe_w1"], [f"{L}.eh"],
+                     activation=cfg.activation)
+            g.add_tensor(f"{L}.moe_w2", (e, fe, d), is_input=True)
+            g.add_tensor(f"{L}.eo", (e, b, d))
+            g.add_op(OpKind.MOE_GATHER_GEMM,
+                     [f"{L}.eh", f"{L}.router", f"{L}.moe_w2"], [f"{L}.eo"])
+            g.add_tensor(f"{L}.moe_out", (b, d))
+            g.add_op(OpKind.MOE_COMBINE, [f"{L}.eo", f"{L}.router"],
+                     [f"{L}.moe_out"])
+            y = f"{L}.moe_out"
+            if cfg.n_shared_experts:
+                fs = fe * cfg.n_shared_experts
+                sg = matmul(x, f"{L}.shared_gate_w", f"{L}.sgate", fs)
+                su = matmul(x, f"{L}.shared_up_w", f"{L}.sup", fs)
+                g.add_tensor(f"{L}.sglu", (b, fs))
+                g.add_op(OpKind.GLU_MUL, [sg, su], [f"{L}.sglu"],
+                         activation=cfg.activation)
+                so = matmul(f"{L}.sglu", f"{L}.shared_down_w",
+                            f"{L}.shared_out", d)
+                g.add_tensor(f"{L}.moe_total", (b, d))
+                g.add_op(OpKind.RESIDUAL_ADD, [y, so], [f"{L}.moe_total"])
+                y = f"{L}.moe_total"
+        if tp > 1:
+            g.add_tensor(f"{L}.ffn_ar", (b, d))
+            g.add_op(OpKind.ALLREDUCE, [y], [f"{L}.ffn_ar"],
+                     mesh_axis="model", tp=tp)
+            y = f"{L}.ffn_ar"
+        g.add_tensor(f"{L}.h2", (b, d))
+        g.add_op(OpKind.RESIDUAL_ADD, [h, y], [f"{L}.h2"])
+        h = f"{L}.h2"
+
+    # ---- final norm + LM head ----
+    g.add_tensor("final_ln_w", (d,), is_input=True)
+    g.add_tensor("hf", (b, d))
+    g.add_op(OpKind.RMSNORM, [h, "final_ln_w"], ["hf"], eps=cfg.norm_eps,
+             gemma_style=cfg.gemma_norm)
+    g.add_tensor("lm_head", (d, cfg.vocab), is_input=True)
+    g.add_tensor("logits", (b, cfg.vocab))
+    g.add_op(OpKind.MATMUL, ["hf", "lm_head"], ["logits"])
+    g.mark_output("logits")
+    g.validate()
+    return g
+
+
+# ---------------------------------------------------------------------------
+# Bindings: map a real (numpy) parameter/cache tree onto graph tensor names.
+# ---------------------------------------------------------------------------
+
+
+def decode_bindings(cfg, params, cache, tokens_or_embeds, seq_lens,
+                    positions=None) -> Dict[str, np.ndarray]:
+    """Numpy buffers for every graph input of ``build_decode_graph``."""
+    st = block_structure(cfg)
+    period = st["period"]
+    f32 = lambda a: np.asarray(a, np.float32)
+    out: Dict[str, np.ndarray] = {
+        "seq_lens": np.asarray(seq_lens, np.int32),
+        "live_lens": np.asarray(seq_lens, np.int32) + 1,
+        "final_ln_w": f32(params["final_ln"]),
+    }
+    if cfg.embed_input:
+        out["h0"] = f32(tokens_or_embeds)
+    else:
+        out["tokens"] = np.asarray(tokens_or_embeds, np.int32)
+        out["embed"] = f32(params["embed"])
+    if st["attn_pos"]:
+        pos = positions if positions is not None else seq_lens
+        if cfg.mrope_sections is not None and np.asarray(pos).ndim == 1:
+            pos = np.stack([pos] * 3, axis=-1)
+        out["positions"] = np.asarray(pos, np.int32)
+    if cfg.tie_embeddings:
+        out["lm_head"] = f32(params["embed"]).T
+    else:
+        out["lm_head"] = f32(params["lm_head"])
+
+    blocks = params["blocks"]
+    for i in range(cfg.n_layers):
+        L = f"L{i}"
+        blk, pos_in_blk = divmod(i, period)
+        kind = cfg.layer_kind(i)
+        take = lambda grp, idx, name: f32(blocks[grp][name][blk, idx])
+        if kind == "attn":
+            ai = st["attn_pos"].index(pos_in_blk)
+            out[f"{L}.ln_w"] = take("attn", ai, "ln")
+            for nm in ("wq", "wk", "wv", "wo"):
+                out[f"{L}.{nm}"] = take("attn", ai, nm)
+            if cfg.qkv_bias:
+                for nm in ("bq", "bk", "bv"):
+                    out[f"{L}.{nm}"] = take("attn", ai, nm)
+            kvd = cfg.n_kv_heads * cfg.hd
+            out[f"{L}.k_cache"] = f32(cache["k"][blk, ai]).reshape(
+                cache["k"].shape[2], cache["k"].shape[3], kvd)
+            out[f"{L}.v_cache"] = f32(cache["v"][blk, ai]).reshape(
+                cache["v"].shape[2], cache["v"].shape[3], kvd)
+        else:
+            si = st["ssm_pos"].index(pos_in_blk)
+            out[f"{L}.ln_w"] = take("ssm", si, "ln")
+            for nm in ("zproj", "xproj", "bproj", "cproj", "dtproj",
+                       "A_log", "D_skip", "dt_bias", "gnorm", "out_proj"):
+                out[f"{L}.{nm.replace('gnorm', 'gnorm_w')}"] = \
+                    take("ssm", si, nm)
+            for tag, wn, bn, cn in (("x", "conv_wx", "conv_bx", "conv_x"),
+                                    ("b", "conv_wb", "conv_bb", "conv_b"),
+                                    ("c", "conv_wc", "conv_bc", "conv_c")):
+                out[f"{L}.conv_w{tag}"] = take("ssm", si, wn)
+                out[f"{L}.conv_b{tag}"] = take("ssm", si, bn)
+                out[f"{L}.conv_{tag}_state"] = f32(cache[cn][blk, si])
+            out[f"{L}.ssm_state"] = f32(cache["ssm"][blk, si])
+        ffn = cfg.ffn_kind(i)
+        if ffn == "mlp":
+            mi = st["mlp_pos"].index(pos_in_blk)
+            out[f"{L}.ln2_w"] = take("mlp", mi, "ln")
+            wi = f32(blocks["mlp"]["wi"][blk, mi])  # (D, 2, F)
+            out[f"{L}.wi_gate"], out[f"{L}.wi_up"] = wi[:, 0], wi[:, 1]
+            out[f"{L}.wo2"] = take("mlp", mi, "wo")
+        elif ffn == "moe":
+            ei = st["moe_pos"].index(pos_in_blk)
+            out[f"{L}.ln2_w"] = take("moe", ei, "ln")
+            out[f"{L}.router_w"] = take("moe", ei, "router")
+            out[f"{L}.moe_w1"] = take("moe", ei, "w1")
+            out[f"{L}.moe_w2"] = take("moe", ei, "w2")
+            if cfg.n_shared_experts:
+                swi = f32(blocks["moe"]["shared_wi"][blk, ei])
+                out[f"{L}.shared_gate_w"] = swi[:, 0]
+                out[f"{L}.shared_up_w"] = swi[:, 1]
+                out[f"{L}.shared_down_w"] = take("moe", ei, "shared_wo")
+    return out

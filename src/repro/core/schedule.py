@@ -1,0 +1,111 @@
+"""Latency-aware scheduling on top of linearization (beyond-paper, §3.3 of
+DESIGN.md).
+
+On GPU, MPK's in-kernel scheduler dynamically overlaps tasks at runtime.  On
+TPU the linearized order *is* the schedule (the persistent kernel executes
+grid steps in order, with the Pallas pipeline prefetching the next task's
+tiles).  Two scheduling knobs remain inside Algorithm 1's guarantees:
+
+* the order in which *ready* events are dequeued, and
+* the order of tasks within one event's launch group.
+
+We exploit both:  (1) communication tasks are released as early as possible so
+their DMA time hides behind unrelated compute (the paper's fine-grained
+MatMul/AllReduce overlap, realized statically); (2) events on the critical
+path are preferred so the pipeline never drains; (3) producer→consumer pairs
+are separated by ≥ pipeline depth when possible, avoiding same-step hazards
+that would stall the double-buffered VMEM pipeline.
+
+``count_pipeline_stalls`` is the metric the §Perf loop drives down.
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, Tuple
+
+from .linearize import LinearizedTGraph, linearize
+from .tgraph import TGraph
+
+__all__ = [
+    "critical_path_depths",
+    "latency_aware_linearize",
+    "count_pipeline_stalls",
+    "overlap_statistics",
+]
+
+
+def critical_path_depths(tg: TGraph) -> Dict[int, float]:
+    """Longest cost-weighted path from each task to a sink (task cost =
+    flops/peak + bytes/bw in abstract units)."""
+    succ: Dict[int, list] = {tid: [] for tid in tg.tasks}
+    indeg: Dict[int, int] = {tid: 0 for tid in tg.tasks}
+    for a, b in tg.task_dependencies():
+        succ[a].append(b)
+        indeg[b] += 1
+    # reverse topological accumulation
+    topo = []
+    ready = [t for t, d in indeg.items() if d == 0]
+    indeg2 = dict(indeg)
+    while ready:
+        n = ready.pop()
+        topo.append(n)
+        for m in succ[n]:
+            indeg2[m] -= 1
+            if indeg2[m] == 0:
+                ready.append(m)
+    depth: Dict[int, float] = {}
+    for n in reversed(topo):
+        t = tg.tasks[n]
+        cost = t.flops() / 197e12 + t.bytes_moved() / 819e9 + 1e-9
+        depth[n] = cost + max((depth[m] for m in succ[n]), default=0.0)
+    return depth
+
+
+def latency_aware_linearize(tg: TGraph) -> LinearizedTGraph:
+    depth = critical_path_depths(tg)
+
+    def event_priority(tg_: TGraph, eid: int) -> float:
+        e = tg_.events[eid]
+        if not e.out_tasks:
+            return float("inf")  # terminal events last
+        has_comm = any(tg_.tasks[t].is_comm for t in e.out_tasks)
+        d = max(depth.get(t, 0.0) for t in e.out_tasks)
+        # communication first (issue DMAs early), then deepest critical path
+        return (0.0 if has_comm else 1e6) - d
+
+    def task_order(tg_: TGraph, tid: int) -> float:
+        t = tg_.tasks[tid]
+        return (0.0 if t.is_comm else 1.0, -depth.get(tid, 0.0))  # type: ignore[return-value]
+
+    return linearize(tg, event_priority=event_priority, task_order=task_order)
+
+
+def count_pipeline_stalls(lin: LinearizedTGraph, pipeline_depth: int = 2) -> int:
+    """Number of direct producer→consumer pairs scheduled fewer than
+    ``pipeline_depth`` steps apart: each such pair forces the persistent
+    kernel to wait for the producer's writeback before the consumer's
+    prefetch, draining the VMEM pipeline."""
+    stalls = 0
+    for a, b in lin.tg.task_dependencies():
+        if 0 < lin.index[b] - lin.index[a] < pipeline_depth:
+            stalls += 1
+    return stalls
+
+
+def overlap_statistics(lin: LinearizedTGraph, window: int = 8) -> Dict[str, float]:
+    """How well communication tasks are interleaved with compute: fraction of
+    comm tasks that have ≥1 independent compute task within ``window``
+    following steps (those DMAs are hidden behind compute)."""
+    tg = lin.tg
+    deps = tg.task_dependencies()
+    comm = [tid for tid in lin.order if tg.tasks[tid].is_comm]
+    if not comm:
+        return {"comm_tasks": 0, "overlapped_frac": 1.0}
+    hidden = 0
+    for tid in comm:
+        i = lin.index[tid]
+        for j in range(i + 1, min(i + 1 + window, len(lin.order))):
+            other = lin.order[j]
+            if not tg.tasks[other].is_comm and (tid, other) not in deps:
+                hidden += 1
+                break
+    return {"comm_tasks": len(comm), "overlapped_frac": hidden / len(comm)}

@@ -1,0 +1,284 @@
+"""Sharding policies: logical-axis rules mapped onto the production mesh.
+
+Axes:
+  data (+pod)  — batch / FSDP weight storage ("fsdp" below)
+  model        — tensor parallel (heads, FFN, vocab), expert parallel (E),
+                 sequence parallel (residual stream between matmuls),
+                 flash-decode KV-seq sharding when KV heads don't divide
+
+Per-shape adaptations (constructed via ``ShardingPolicy.for_shape``):
+  train/prefill — batch over (pod,data); SP over model when seq divides;
+                  weights 2D (fsdp × model)
+  decode        — batch over (pod,data) when divisible; KV cache seq axis
+                  over model when KV heads don't divide the model axis
+  long-context  — batch=1: KV/state seq over (pod,data) and heads over
+                  model, i.e. flash-decoding across the whole pod
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+__all__ = ["ShardingPolicy"]
+
+
+def _divides(n: int, d: int) -> bool:
+    return d > 0 and n % d == 0
+
+
+def _cache_bytes(cfg, batch: int, seq: int) -> int:
+    """Total decode-cache bytes across all chips (bf16 KV, f32 SSM)."""
+    total = 0
+    n_attn = sum(1 for i in range(cfg.n_layers) if cfg.layer_kind(i) == "attn")
+    n_ssm = cfg.n_layers - n_attn
+    total += n_attn * 2 * batch * seq * cfg.n_kv_heads * cfg.hd * 2
+    if n_ssm:
+        gn = cfg.ssm_ngroups * cfg.ssm_state
+        total += n_ssm * batch * (
+            cfg.ssm_conv * (cfg.d_inner + 2 * gn) * 2
+            + cfg.ssm_nheads * cfg.ssm_head_dim * cfg.ssm_state * 4)
+    return total
+
+
+@dataclasses.dataclass
+class ShardingPolicy:
+    mesh: Mesh
+    cfg: Any
+    dp_axes: Tuple[str, ...] = ("data",)
+    tp_axis: str = "model"
+    fsdp_axes: Tuple[str, ...] = ("data",)
+    #: shard the sequence axis of activations over tp (Megatron-SP)
+    shard_seq: bool = False
+    #: shard the KV-cache sequence axis (flash-decoding): None | "tp" | "dp"
+    kv_seq_shard: Optional[str] = None
+    #: shard batch axes of activations/caches (off when batch < dp size)
+    shard_batch: bool = True
+    #: pure-DP mode: the model axis joined data parallelism; no TP specs
+    tp_disabled: bool = False
+    #: decode cache write as a masked rewrite instead of a scatter —
+    #: shard-local on a sequence-sharded cache (no all-gather)
+    masked_cache_update: bool = False
+    #: replicate q heads in decode (required when the cache's SEQ axis is
+    #: on the model axis — two dims of one contraction can't share an
+    #: axis, so head-sharded q forces GSPMD to all-gather the cache)
+    q_head_replicate: bool = False
+    #: 2D expert GEMM for decode-time MoE under FSDP weights (weights
+    #: never move; activations-sized communication instead)
+    moe_2d: bool = False
+
+    # ------------------------------------------------------------- factory
+    @classmethod
+    def for_shape(cls, cfg, mesh: Mesh, shape, *,
+                  overrides: Optional[Dict[str, Any]] = None
+                  ) -> "ShardingPolicy":
+        """Baseline policy per shape; ``overrides`` are the §Perf
+        hillclimbing knobs:
+
+          shard_seq: bool     — Megatron-SP residual sharding (train)
+          pure_dp: bool       — fold the model axis into data parallelism
+                                (dense archs whose per-chip state fits;
+                                kills all TP/SP collectives, FSDP over
+                                every chip)
+          kv_dtype_bytes: int — KV cache element size (2 = bf16 baseline,
+                                1 = fp8 quantized cache)
+        """
+        ov = overrides or {}
+        axes = list(mesh.shape.keys())
+        dp = tuple(a for a in axes if a in ("pod", "data"))
+        tp = "model"
+        tp_size = mesh.shape[tp]
+        if ov.get("pure_dp"):
+            assert not cfg.n_experts, "pure_dp: MoE needs the EP axis"
+            dp = dp + (tp,)
+            tp_size = 1
+        dp_size = int(np.prod([mesh.shape[a] for a in dp]))
+        chips = dp_size * tp_size
+        batch = shape.global_batch
+        shard_batch = _divides(batch, dp_size)
+        if shape.step in ("train", "prefill"):
+            sp = ov.get("shard_seq",
+                        _divides(shape.seq_len, tp_size) and tp_size > 1)
+            return cls(mesh, cfg, dp_axes=dp, fsdp_axes=dp,
+                       shard_seq=sp, shard_batch=shard_batch,
+                       tp_disabled=tp_size == 1)
+        # decode: TP-only weight sharding (replicated over data — the
+        # standard serving layout, no per-step weight all-gathers) when the
+        # per-chip share of weights + caches fits HBM; 2D (FSDP×TP) weight
+        # sharding otherwise (the only way ≥100B archs fit 16 GB chips).
+        kv_bytes = ov.get("kv_dtype_bytes", 2)
+        param_pd = 2 * cfg.param_count() / tp_size
+        cache_pd = (_cache_bytes(cfg, batch, shape.seq_len)
+                    * kv_bytes / 2 / chips)
+        fsdp = () if (param_pd + cache_pd) < 11e9 else dp
+        kv_div = _divides(cfg.n_kv_heads, tp_size)
+        kv_seq = None if kv_div else ("dp" if not shard_batch else "tp")
+        return cls(mesh, cfg, dp_axes=dp, fsdp_axes=fsdp,
+                   shard_seq=False, kv_seq_shard=kv_seq,
+                   shard_batch=shard_batch, tp_disabled=tp_size == 1,
+                   masked_cache_update=bool(ov.get("masked_cache_update")),
+                   q_head_replicate=bool(ov.get("q_head_replicate")),
+                   moe_2d=bool(ov.get("moe_2d")) and bool(fsdp))
+
+    # ------------------------------------------------------------- helpers
+    @property
+    def ep_axis(self) -> str:
+        return self.tp_axis
+
+    @property
+    def tp_size(self) -> int:
+        return 1 if self.tp_disabled else self.mesh.shape[self.tp_axis]
+
+    @property
+    def tp(self):
+        """Mesh axis for TP specs; None in pure-DP mode."""
+        return None if self.tp_disabled else self.tp_axis
+
+    @property
+    def dp(self):
+        return self.dp_axes if self.shard_batch else None
+
+    def _heads_ok(self, n: int) -> bool:
+        return _divides(n, self.tp_size)
+
+    @property
+    def _vocab_ok(self) -> bool:
+        return _divides(self.cfg.vocab, self.tp_size)
+
+    def ns(self, *spec) -> NamedSharding:
+        return NamedSharding(self.mesh, P(*spec))
+
+    # --------------------------------------------------------- activations
+    def act(self, x: jax.Array, name: str) -> jax.Array:
+        spec = self.act_spec(name, x.ndim)
+        if spec is None:
+            return x
+        return jax.lax.with_sharding_constraint(x, self.ns(*spec))
+
+    def act_spec(self, name: str, ndim: int):
+        tp, dp = self.tp, self.dp
+        sp = tp if self.shard_seq else None
+        cfg = self.cfg
+        if name == "resid":
+            # Megatron-SP: the residual stream (layernorm-adjacent) is the
+            # only sequence-sharded activation; matmul outputs shard on
+            # their feature axis instead.
+            return (dp, sp, None) if ndim == 3 else (dp, None)
+        if name == "logits":
+            vt = tp if self._vocab_ok else None
+            seq = sp if vt is None else None
+            return (dp, seq, vt) if ndim == 3 else (dp, vt)
+        if name == "qkv":
+            h = tp if self._heads_ok(cfg.n_heads) else None
+            if self.q_head_replicate and ndim == 2 + 1:  # decode (B,H,hd)
+                h = None
+            return (dp, None, h, None) if ndim == 4 else (dp, h, None)
+        if name == "kv":
+            h = tp if self._heads_ok(cfg.n_kv_heads) else None
+            return (dp, None, h, None) if ndim == 4 else (dp, h, None)
+        if name == "kv_cache":  # (B, S, KV, hd)
+            h = tp if self._heads_ok(cfg.n_kv_heads) else None
+            seq = {None: None, "tp": tp, "dp": self.dp_axes}[self.kv_seq_shard]
+            return (dp, seq, h if seq != tp else None, None)
+        if name == "mlp_hidden":  # (..., 2, F)
+            return (dp, None, None, tp) if ndim == 4 else (dp, None, tp)
+        if name == "ssm_inner":  # (B, S, d_inner) | (B, d_inner)
+            return (dp, None, tp) if ndim == 3 else (dp, tp)
+        return None
+
+    # ------------------------------------------------------------- params
+    def param_specs(self, params: Dict[str, Any]) -> Dict[str, Any]:
+        """PartitionSpec tree matching an ``init_params`` tree (or its
+        eval_shape).  Keyed on param names; leading block axes replicated."""
+        fs, tp = self.fsdp_axes, self.tp
+        cfg = self.cfg
+
+        def spec_for(path: Tuple[str, ...], leaf) -> P:
+            name = path[-1]
+            nb = leaf.ndim  # includes (n_blocks, per_block) prefix for blocks
+            pre = (None, None) if path[0] == "blocks" else ()
+            if name == "embed":
+                return P(tp if self._vocab_ok else None, fs)
+            if name == "lm_head":
+                return P(fs, tp if self._vocab_ok else None)
+            if name == "final_ln":
+                return P(None)
+            if name in ("wq", "wk", "wv"):
+                return P(*pre, fs, tp)
+            if name == "wo":
+                return P(*pre, tp, fs)
+            if name in ("bq", "bk", "bv"):
+                return P(*pre, tp)
+            if name == "wi":        # (D, 2, F)
+                return P(*pre, fs, None, tp)
+            if name == "router":    # (D, E) — small, replicated
+                return P(*pre, None, None)
+            if name == "w1":        # (E, D, 2, F) — EP on E
+                return P(*pre, tp, fs, None, None)
+            if name == "w2":        # (E, F, D)
+                return P(*pre, tp, None, fs)
+            if name == "shared_wi":  # (D, 2, F)
+                return P(*pre, fs, None, tp)
+            if name == "shared_wo":  # (F, D)
+                return P(*pre, tp, fs)
+            if name in ("zproj", "xproj", "bproj", "cproj", "dtproj"):
+                return P(*pre, fs, tp)
+            if name in ("conv_wx", "conv_wb", "conv_wc"):
+                return P(*pre, None, tp)
+            if name in ("conv_bx", "conv_bb", "conv_bc", "gnorm"):
+                return P(*pre, tp)
+            if name in ("A_log", "D_skip", "dt_bias"):
+                return P(*pre, tp)
+            if name == "out_proj":  # (d_inner, D)
+                return P(*pre, tp, fs)
+            if name == "ln":
+                return P(*pre, None)
+            return P()  # replicate
+
+        return _map_with_path(spec_for, params)
+
+    # -------------------------------------------------------------- caches
+    def cache_specs(self, cache: Dict[str, Any]) -> Dict[str, Any]:
+        tp, dp = self.tp, self.dp
+        cfg = self.cfg
+        kv_h = tp if self._heads_ok(cfg.n_kv_heads) else None
+        seq = {None: None, "tp": tp, "dp": self.dp_axes}[self.kv_seq_shard]
+        nh_s = tp if _divides(cfg.ssm_nheads, self.tp_size) else None
+
+        def spec_for(path, leaf):
+            name = path[-1]
+            if name in ("k", "v"):   # (nb, na, B, S, KV, hd)
+                return P(None, None, dp, seq, kv_h if seq != tp else None,
+                         None)
+            if name == "conv_x":     # (nb, ns, B, W, d_inner)
+                return P(None, None, dp, None, tp)
+            if name in ("conv_b", "conv_c"):
+                return P(None, None, dp, None, tp)
+            if name == "ssm":        # (nb, ns, B, nh, hd, N)
+                return P(None, None, dp, nh_s, None, None)
+            return P()
+
+        return _map_with_path(spec_for, cache)
+
+    # -------------------------------------------------------------- inputs
+    def batch_spec(self, ndim: int) -> P:
+        """tokens/labels (B, S) or (B,); embeds get an extra trailing dim."""
+        dp = self.dp
+        return P(dp, *([None] * (ndim - 1)))
+
+    def to_shardings(self, spec_tree):
+        return jax.tree.map(
+            lambda s: NamedSharding(self.mesh, s), spec_tree,
+            is_leaf=lambda s: isinstance(s, P))
+
+
+def _map_with_path(fn, tree):
+    """tree_map passing the dict-key path to ``fn``."""
+    def rec(path, node):
+        if isinstance(node, dict):
+            return {k: rec(path + (k,), v) for k, v in node.items()}
+        return fn(path, node)
+    return rec((), tree)

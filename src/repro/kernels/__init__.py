@@ -1,0 +1,12 @@
+"""Pallas TPU kernels for the paper's compute hot-spots.
+
+``megakernel/`` is the paper's artifact: one persistent pallas_call
+executing an entire compiled tGraph.  The standalone kernels below are
+the per-task implementations at production tile sizes (BlockSpec grid
+form), validated against ``ref.py``.
+"""
+from .flash_attention import flash_attention
+from .matmul import matmul
+from .rmsnorm import rmsnorm
+
+__all__ = ["flash_attention", "matmul", "rmsnorm"]

@@ -1,0 +1,94 @@
+"""Causal FlashAttention (prefill) Pallas kernel.
+
+Grid (B·H, S/bq, S/bk): the KV axis is innermost; running max / sum /
+accumulator live in VMEM scratch across KV steps (online softmax).  KV
+blocks entirely above the causal diagonal are skipped via ``pl.when`` —
+the standard TPU flash-attention structure, and the per-task kernel the
+megakernel's attention tasks correspond to at prefill shapes.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["flash_attention"]
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
+            *, scale: float, bq: int, bk: int, causal: bool):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _():
+        m_ref[...] = jnp.full_like(m_ref, -1e30)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    run = (not causal) or True  # block-level skip handled below
+
+    @pl.when(jnp.logical_or(not causal, ki * bk <= qi * bq + bq - 1))
+    def _():
+        q = q_ref[0].astype(jnp.float32) * scale          # (bq, hd)
+        k = k_ref[0].astype(jnp.float32)                  # (bk, hd)
+        logits = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32)           # (bq, bk)
+        if causal:
+            q_idx = qi * bq + jax.lax.iota(jnp.int32, bq)
+            k_idx = ki * bk + jax.lax.iota(jnp.int32, bk)
+            mask = k_idx[None, :] <= q_idx[:, None]
+            logits = jnp.where(mask, logits, -1e30)
+        m_new = jnp.maximum(m_ref[...], jnp.max(logits, axis=-1,
+                                                keepdims=True))
+        p = jnp.exp(logits - m_new)
+        corr = jnp.exp(m_ref[...] - m_new)
+        l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=-1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
+            p, v_ref[0].astype(jnp.float32), (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(ki == pl.num_programs(2) - 1)
+    def _():
+        o_ref[0] = (acc_ref[...]
+                    / jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("bq", "bk", "causal", "interpret"))
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    bq: int = 128, bk: int = 128, causal: bool = True,
+                    interpret: bool = True) -> jax.Array:
+    """q/k/v (B, S, H, hd) MHA -> (B, S, H, hd)."""
+    b, s, h, hd = q.shape
+    bq, bk = min(bq, s), min(bk, s)
+    assert s % bq == 0 and s % bk == 0
+    scale = 1.0 / math.sqrt(hd)
+    # (B·H, S, hd) layout
+    qr = q.transpose(0, 2, 1, 3).reshape(b * h, s, hd)
+    kr = k.transpose(0, 2, 1, 3).reshape(b * h, s, hd)
+    vr = v.transpose(0, 2, 1, 3).reshape(b * h, s, hd)
+    out = pl.pallas_call(
+        functools.partial(_kernel, scale=scale, bq=bq, bk=bk, causal=causal),
+        grid=(b * h, s // bq, s // bk),
+        in_specs=[
+            pl.BlockSpec((1, bq, hd), lambda g, i, j: (g, i, 0)),
+            pl.BlockSpec((1, bk, hd), lambda g, i, j: (g, j, 0)),
+            pl.BlockSpec((1, bk, hd), lambda g, i, j: (g, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, hd), lambda g, i, j: (g, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * h, s, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qr, kr, vr)
+    return out.reshape(b, h, s, hd).transpose(0, 2, 1, 3)

@@ -1,0 +1,59 @@
+"""Tiled matmul Pallas kernel with explicit BlockSpec VMEM tiling.
+
+Grid (M/bm, N/bn, K/bk); the K axis is the innermost (sequential on TPU)
+grid dimension, accumulating into a VMEM f32 scratch tile — the canonical
+MXU-aligned TPU matmul.  Pallas's automatic cross-grid-step double
+buffering prefetches the next K-tile while the MXU consumes the current
+one: this is the intra-task software-pipelining half of the paper's
+story, and the pipelining ablation (benchmarks/fig12) toggles it by
+re-lowering with a serialized (1-step) grid.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["matmul"]
+
+
+def _kernel(a_ref, b_ref, o_ref, acc_ref):
+    k_idx = pl.program_id(2)
+
+    @pl.when(k_idx == 0)
+    def _():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jax.lax.dot_general(
+        a_ref[...], b_ref[...], (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    @pl.when(k_idx == pl.num_programs(2) - 1)
+    def _():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "interpret"))
+def matmul(a: jax.Array, b: jax.Array, *, bm: int = 128, bn: int = 128,
+           bk: int = 128, interpret: bool = True) -> jax.Array:
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2
+    bm, bn, bk = min(bm, m), min(bn, n), min(bk, k)
+    assert m % bm == 0 and n % bn == 0 and k % bk == 0, (m, n, k, bm, bn, bk)
+    grid = (m // bm, n // bn, k // bk)
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), a.dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=interpret,
+    )(a, b)

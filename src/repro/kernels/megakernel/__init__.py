@@ -1,0 +1,4 @@
+from .desc import MegakernelProgram, lower_tgraph
+from .ops import run_megakernel
+
+__all__ = ["MegakernelProgram", "lower_tgraph", "run_megakernel"]

@@ -1,0 +1,365 @@
+"""Megakernel lowering: CompiledTGraph → (heap layout, task descriptors).
+
+This is the TPU analogue of MPK's task-description generation (§4.2 /
+§5.3): every task becomes a fixed-size int32 descriptor (24 words ≈ the
+paper's 352-byte descriptions), prefetched into SMEM via Pallas scalar
+prefetch before the grid step executes — the direct analogue of the
+paper's task-description prefetching.
+
+Heap: one flat f32 buffer holding every graph tensor.  A tensor of shape
+``(..., cols)`` is stored as ``rows = prod(shape[:-1])`` rows with padded
+row stride ``ld = align128(cols + TN)`` so that any fixed-width (TN) tile
+DMA stays inside its own row slot — tile reads/writes never clobber
+neighbours and masking handles the tail columns.
+
+State aliasing: ``cache_update`` / ``conv1d_update`` / ``ssm_update``
+outputs alias their input state region (in-place update), exactly like the
+persistent kernel on real hardware; the SSA tGraph interpreter remains the
+copying oracle.
+
+Descriptor layout (int32 × 24) — field use per kind documented inline:
+   0 kind   1 m      2 n      3 k      4 out_off 5 ldo
+   6 a_off  7 lda    8 b_off  9 ldb   10 c_off  11 ldc
+  12 d_off 13 ldd   14 act   15 aux0  16 aux1   17 fbits0
+  18 fbits1 19 e_off 20 lde  21 aux2  22 aux3   23 aux4
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from ...core.compile import CompiledTGraph
+from ...core.graph import OpKind
+
+__all__ = ["KIND_CODES", "DESC_WORDS", "MegakernelProgram", "lower_tgraph"]
+
+DESC_WORDS = 24
+
+KIND_CODES = {
+    "noop": 0,
+    OpKind.MATMUL: 1,
+    OpKind.RMSNORM: 2,
+    OpKind.ROPE: 3,
+    OpKind.GLU_MUL: 4,
+    OpKind.RESIDUAL_ADD: 5,
+    OpKind.ELEMENTWISE: 5,          # scale-add, b absent
+    OpKind.ATTENTION_DECODE: 6,
+    OpKind.CACHE_UPDATE: 7,
+    OpKind.EMBED_LOOKUP: 8,
+    OpKind.SOFTMAX_TOPK: 9,
+    OpKind.MOE_GATHER_GEMM: 10,
+    OpKind.MOE_COMBINE: 11,
+    OpKind.SSM_UPDATE: 12,
+    OpKind.CONV1D_UPDATE: 13,
+}
+
+_ACT_IDS = {None: 0, "identity": 0, "silu": 1, "gelu": 2}
+
+
+def _align(n: int, a: int = 128) -> int:
+    return (n + a - 1) // a * a
+
+
+def _fbits(x: float) -> int:
+    return int(np.float32(x).view(np.int32))
+
+
+@dataclasses.dataclass
+class TensorSlot:
+    offset: int       # heap element offset of [0, ..., 0]
+    ld: int           # row stride (elements) of the last dim
+    shape: Tuple[int, ...]
+
+    @property
+    def rows(self) -> int:
+        r = 1
+        for s in self.shape[:-1]:
+            r *= s
+        return r
+
+    def elem(self, *idx: int) -> int:
+        """Heap offset of element ``idx`` (last index is a column)."""
+        assert len(idx) == len(self.shape)
+        row = 0
+        for s, i in zip(self.shape[:-1], idx[:-1]):
+            row = row * s + i
+        return self.offset + row * self.ld + idx[-1]
+
+
+@dataclasses.dataclass
+class MegakernelProgram:
+    compiled: CompiledTGraph
+    descs: np.ndarray                 # (num_tasks, DESC_WORDS) int32
+    layout: Dict[str, TensorSlot]
+    heap_size: int
+    statics: Dict[str, Any]           # compile-time kernel parameters
+
+    def build_heap(self, bindings: Dict[str, np.ndarray]) -> np.ndarray:
+        heap = np.zeros((self.heap_size,), np.float32)
+        g = self.compiled.graph
+        for name in g.inputs:
+            slot = self.layout[name]
+            a = np.asarray(bindings[name], np.float32)
+            a2 = a.reshape(slot.rows, a.shape[-1] if a.ndim else 1)
+            view = heap[slot.offset : slot.offset + slot.rows * slot.ld]
+            view = view.reshape(slot.rows, slot.ld)
+            view[:, : a2.shape[1]] = a2
+        return heap
+
+    def read_output(self, heap: np.ndarray, name: str) -> np.ndarray:
+        slot = self.layout[name]
+        cols = slot.shape[-1]
+        view = heap[slot.offset : slot.offset + slot.rows * slot.ld]
+        return view.reshape(slot.rows, slot.ld)[:, :cols].reshape(slot.shape)
+
+
+#: outputs that alias an input region (in-place state update)
+_ALIAS_OPS = {
+    OpKind.CACHE_UPDATE: {0: 0},      # out0 aliases ins[0] (the cache)
+    OpKind.CONV1D_UPDATE: {1: 1},     # new conv state aliases ins[1]
+    OpKind.SSM_UPDATE: {1: 1},        # new ssm state aliases ins[1]
+}
+
+
+def _build_layout(compiled: CompiledTGraph, tn: int
+                  ) -> Tuple[Dict[str, TensorSlot], int]:
+    g = compiled.graph
+    alias: Dict[str, str] = {}
+    for op in g.ops:
+        amap = _ALIAS_OPS.get(op.kind)
+        if amap:
+            for out_i, in_i in amap.items():
+                alias[op.outputs[out_i]] = op.inputs[in_i]
+    layout: Dict[str, TensorSlot] = {}
+    off = 0
+    for name, spec in g.tensors.items():
+        if name in alias:
+            continue
+        cols = spec.shape[-1] if spec.shape else 1
+        ld = _align(cols + tn)
+        rows = 1
+        for s in spec.shape[:-1]:
+            rows *= s
+        layout[name] = TensorSlot(off, ld, tuple(spec.shape) or (1,))
+        off += rows * ld
+    # resolve alias chains (cache -> cache2 -> ... not chained here, but safe)
+    for dst, src in alias.items():
+        root = src
+        while root in alias:
+            root = alias[root]
+        base = layout[root]
+        layout[dst] = TensorSlot(base.offset, base.ld,
+                                 tuple(g.spec(dst).shape))
+    return layout, off + tn  # trailing pad
+
+
+def lower_tgraph(compiled: CompiledTGraph, cfg,
+                 tn: Optional[int] = None) -> MegakernelProgram:
+    g = compiled.graph
+    tg = compiled.tg
+
+    # tile-size statics from the task set
+    max_n = 1
+    max_m = 1
+    max_k = 1
+    for t in tg.tasks.values():
+        if t.is_dummy:
+            continue
+        op = g.op(t.op_id)
+        pr = t.out_regions[op.outputs[0]]
+        max_m = max(max_m, pr.shape[0])
+        if pr.ndim >= 2:
+            max_n = max(max_n, pr.shape[-1])
+        if op.kind == OpKind.MATMUL:
+            max_k = max(max_k, g.spec(op.inputs[0]).shape[-1])
+        if op.kind == OpKind.RMSNORM:
+            max_n = max(max_n, g.spec(op.inputs[0]).shape[-1])
+    tn = tn or _align(max_n)
+    layout, heap_size = _build_layout(compiled, tn)
+
+    descs = np.zeros((len(compiled.order), DESC_WORDS), np.int32)
+    statics: Dict[str, Any] = {
+        "TN": tn, "TM": max_m, "TK": _align(max_k),
+        "HD": cfg.hd, "G": cfg.q_per_kv,
+        "THETA": float(cfg.rope_theta),
+        "MROPE": tuple(cfg.mrope_sections or ()),
+        "HD_SSM": cfg.ssm_head_dim, "N_SSM": cfg.ssm_state,
+        "W_CONV": cfg.ssm_conv, "TOPK": cfg.top_k,
+        "NEG_EXP_A": True,
+        "EPS": cfg.norm_eps,
+    }
+
+    for pos, tid in enumerate(compiled.order):
+        task = tg.tasks[tid]
+        d = descs[pos]
+        if task.is_dummy:
+            d[0] = 0
+            continue
+        op = g.op(task.op_id)
+        kind = op.kind
+        d[0] = KIND_CODES[kind]
+        pr = task.out_regions[op.outputs[0]]
+        out = layout[op.outputs[0]]
+        ins = op.inputs
+        sl = lambda i: layout[ins[i]]
+        reg = lambda i: task.in_regions[ins[i]]
+
+        r0 = pr.starts[0]
+        c0 = pr.starts[-1] if pr.ndim >= 2 else 0
+        m = pr.shape[0]
+        n = pr.shape[-1] if pr.ndim >= 2 else 1
+        d[1], d[2] = m, n
+        if pr.ndim == 2:
+            d[4], d[5] = out.elem(r0, c0), out.ld
+
+        if kind == OpKind.MATMUL:
+            a, w = sl(0), sl(1)
+            k = a.shape[-1]
+            d[3] = k
+            d[6], d[7] = a.elem(r0, 0), a.ld
+            d[8], d[9] = w.elem(0, c0), w.ld
+            if len(ins) > 2:
+                d[10] = sl(2).elem(c0)
+            else:
+                d[10] = -1
+            d[14] = _ACT_IDS[op.attrs.get("activation")]
+        elif kind == OpKind.RMSNORM:
+            x, w = sl(0), sl(1)
+            d[2] = x.shape[-1]
+            d[6], d[7] = x.elem(r0, 0), x.ld
+            d[10] = w.elem(0)
+            d[14] = 1 if op.attrs.get("gemma_style") else 0
+            d[17] = _fbits(op.attrs.get("eps", 1e-6))
+        elif kind == OpKind.ROPE:
+            x = sl(0)
+            d[6], d[7] = x.elem(r0, c0), x.ld
+            pos_slot = sl(1)
+            psh = g.spec(ins[1]).shape
+            d[19] = pos_slot.elem(r0, 0) if len(psh) == 2 else \
+                pos_slot.elem(r0)
+            d[20] = pos_slot.ld if len(psh) == 2 else 1
+            d[15] = 1 if len(psh) == 2 else 0        # mrope positions
+            d[16] = c0                               # global col offset
+        elif kind in (OpKind.GLU_MUL,):
+            a, bb = sl(0), sl(1)
+            d[6], d[7] = a.elem(r0, c0), a.ld
+            d[8], d[9] = bb.elem(r0, c0), bb.ld
+            d[14] = _ACT_IDS[op.attrs.get("activation", "silu")]
+        elif kind in (OpKind.RESIDUAL_ADD, OpKind.ELEMENTWISE):
+            a = sl(0)
+            d[6], d[7] = a.elem(r0, c0), a.ld
+            if len(ins) > 1:
+                bb = sl(1)
+                d[8], d[9] = bb.elem(r0, c0), bb.ld
+            else:
+                d[8] = -1
+            d[17] = _fbits(op.attrs.get("scale", 1.0))
+        elif kind == OpKind.ATTENTION_DECODE:
+            q, kc, vc = sl(0), sl(1), sl(2)
+            b_cache, s_cache, kvd = kc.shape
+            hd, grp = op.attrs["head_dim"], op.attrs["q_per_kv"]
+            kv0 = c0 // (hd * grp)                   # first kv head in tile
+            d[3] = s_cache
+            d[6], d[7] = q.elem(r0, c0), q.ld
+            d[8], d[9] = kc.elem(r0, 0, kv0 * hd), kc.ld
+            d[15] = s_cache * kc.ld                  # batch stride
+            d[10], d[11] = vc.elem(r0, 0, kv0 * hd), vc.ld
+            d[12] = sl(3).elem(r0)                   # live_lens
+            d[17] = _fbits(op.attrs.get("scale", hd ** -0.5))
+            d[16] = n // (hd * grp)                  # groups in this tile
+        elif kind == OpKind.CACHE_UPDATE:
+            cache, new = sl(0), sl(1)
+            b_cache, s_cache, kvd = cache.shape
+            d[2] = task.in_regions[ins[1]].shape[-1]
+            d[4], d[5] = cache.elem(r0, 0, pr.starts[-1]), cache.ld
+            d[15] = s_cache * cache.ld               # batch stride
+            d[6], d[7] = new.elem(r0, pr.starts[-1]), new.ld
+            d[12] = sl(2).elem(r0)                   # seq_lens
+        elif kind == OpKind.EMBED_LOOKUP:
+            ids, table = sl(0), sl(1)
+            d[6] = ids.elem(r0)
+            d[8], d[9] = table.elem(0, c0), table.ld
+        elif kind == OpKind.SOFTMAX_TOPK:
+            x = sl(0)
+            d[2] = x.shape[-1]
+            d[3] = op.attrs["top_k"]
+            d[6], d[7] = x.elem(r0, 0), x.ld
+        elif kind == OpKind.MOE_GATHER_GEMM:
+            e0 = pr.starts[0]
+            toks = pr.shape[1]
+            fcols = pr.shape[2]
+            f0 = pr.starts[2]
+            x, router, w = sl(0), sl(1), sl(2)
+            d[1], d[2] = toks, fcols
+            d[4], d[5] = out.elem(e0, 0, f0), out.ld
+            if len(x.shape) == 3:    # second gemm: expert-local hidden
+                d[6], d[7] = x.elem(e0, 0, 0), x.ld
+            else:
+                d[6], d[7] = x.elem(0, 0), x.ld
+            d[3] = x.shape[-1]
+            if len(w.shape) == 4:    # fused GLU weights (E, D, 2, F)
+                d[8], d[9] = w.elem(e0, 0, 0, f0), 2 * w.ld
+                d[19] = w.elem(e0, 0, 1, f0)
+                d[15] = 1            # glu flag
+            else:
+                d[8], d[9] = w.elem(e0, 0, f0), w.ld
+                d[19] = -1
+                d[15] = 0
+            d[10], d[11] = router.elem(0, e0), router.ld
+            d[14] = _ACT_IDS[op.attrs.get("activation")]
+        elif kind == OpKind.MOE_COMBINE:
+            eo, router = sl(0), sl(1)
+            n_exp, toks, _dm = eo.shape
+            d[3] = n_exp
+            d[6], d[7] = eo.elem(0, r0, c0), eo.ld
+            d[15] = toks * eo.ld                     # expert stride
+            d[10], d[11] = router.elem(r0, 0), router.ld
+        elif kind == OpKind.SSM_UPDATE:
+            x, state, dt, a_log, bmat, cmat = (sl(i) for i in range(6))
+            hd = op.attrs["head_dim"]
+            h0 = c0 // hd
+            bsz, nh, _hd, nst = state.shape
+            d[3] = nst
+            d[6], d[7] = x.elem(r0, c0), x.ld
+            d[8], d[9] = state.elem(r0, h0, 0, 0), state.ld
+            d[15] = nh * _hd * state.ld              # batch stride (rows)
+            d[16] = _hd * state.ld                   # head stride
+            d[10], d[11] = dt.elem(r0, h0), dt.ld
+            d[12] = a_log.elem(h0)
+            d[19], d[20] = bmat.elem(r0, 0), bmat.ld
+            d[21], d[22] = cmat.elem(r0, 0), cmat.ld
+            d[23] = sl(6).elem(h0) if len(ins) > 6 else -1
+        elif kind == OpKind.CONV1D_UPDATE:
+            x, state, w = sl(0), sl(1), sl(2)
+            bsz, wconv, _c = state.shape
+            d[3] = wconv
+            d[6], d[7] = x.elem(r0, c0), x.ld
+            d[8], d[9] = state.elem(r0, 0, c0), state.ld
+            d[15] = wconv * state.ld                 # batch stride
+            d[10], d[11] = w.elem(0, c0), w.ld
+            d[12] = sl(3).elem(c0) if len(ins) > 3 else -1
+        else:
+            raise NotImplementedError(f"megakernel lowering for {kind}")
+
+    # ---- post-pass statics from the descriptor table ----
+    kinds = descs[:, 0]
+    statics["TM"] = int(descs[:, 1].max(initial=1))
+    attn = kinds == KIND_CODES[OpKind.ATTENTION_DECODE]
+    statics["NG"] = int(descs[attn, 16].max(initial=1))
+    statics["S_MAX"] = int(descs[attn, 3].max(initial=1))
+    ssm = kinds == KIND_CODES[OpKind.SSM_UPDATE]
+    if ssm.any():
+        statics["NH_TILE"] = int(
+            (descs[ssm, 2] // max(1, cfg.ssm_head_dim)).max(initial=1))
+    comb = kinds == KIND_CODES[OpKind.MOE_COMBINE]
+    statics["E_MAX"] = int(descs[comb, 3].max(initial=1))
+    gg = kinds == KIND_CODES[OpKind.MOE_GATHER_GEMM]
+    mm = kinds == KIND_CODES[OpKind.MATMUL]
+    k_max = 1
+    for mask in (gg, mm):
+        if mask.any():
+            k_max = max(k_max, int(descs[mask, 3].max(initial=1)))
+    statics["TK"] = _align(max(statics["TK"], k_max))
+    return MegakernelProgram(compiled, descs, layout, heap_size, statics)

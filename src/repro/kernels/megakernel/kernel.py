@@ -1,0 +1,450 @@
+"""The persistent megakernel: one ``pl.pallas_call`` executes an entire
+compiled tGraph as a stream of tasks.
+
+TPU adaptation of MPK's in-kernel runtime (paper §5): the 1-D grid *is*
+the linearized task list (grid order = execution schedule = Algorithm 1's
+output); task descriptors are scalar-prefetched into SMEM (§5.3 descriptor
+prefetch); every operand tile is DMA'd HBM→VMEM on demand (the paged
+shared-memory analogue — fixed VMEM scratch buffers play the role of
+pages, acquired per task and reused across tasks); state updates
+(KV-cache / conv / SSM) write in place through buffer aliasing.  Task
+dispatch is a ``lax.switch`` over the task-kind word — the task library
+below is the §4.2 per-task device-function set.
+
+Validated in interpret mode against the numpy tGraph interpreter and the
+JAX model oracle (tests/test_megakernel.py).  On real TPU hardware the
+same structure lowers with multi-buffered DMA; cross-core communication
+tasks become remote DMAs + semaphores (see DESIGN.md §2).
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from .desc import DESC_WORDS
+
+__all__ = ["make_megakernel"]
+
+
+def _f32(bits):
+    return jax.lax.bitcast_convert_type(bits, jnp.float32)
+
+
+def _act(y, act_id):
+    return jax.lax.switch(
+        act_id,
+        [lambda v: v, jax.nn.silu, jax.nn.gelu],
+        y,
+    )
+
+
+def make_megakernel(statics: Dict[str, Any], num_tasks: int,
+                    heap_size: int):
+    TN = statics["TN"]
+    TM = statics["TM"]
+    TKC = min(128, max(8, statics["TK"]))
+    KCH = max(1, math.ceil(statics["TK"] / TKC))
+    HD = max(1, statics["HD"])
+    G = max(1, statics["G"])
+    NG = max(1, statics.get("NG", 1))
+    S_MAX = max(1, statics.get("S_MAX", 1))
+    TS = min(128, S_MAX)
+    SCH = max(1, math.ceil(S_MAX / TS))
+    MROPE = statics["MROPE"]
+    THETA = statics["THETA"]
+    HDS = max(1, statics["HD_SSM"])
+    NS = max(1, statics["N_SSM"])
+    NHT = max(1, statics.get("NH_TILE", 1))
+    WC = max(1, statics["W_CONV"])
+    TOPK = max(1, statics["TOPK"])
+    EMAX = max(1, statics.get("E_MAX", 1))
+    SB_ROWS = max(TKC, TS, HDS, WC, 8)
+    TNK = max(TN, TKC)
+
+    def kernel(desc, heap_in, heap, sA, sB, sC, sD, acc, acc2, sem):
+        t = pl.program_id(0)
+        d = lambda i: desc[t, i]
+
+        # ---------------- DMA helpers (all through the aliased out ref) ---
+        def load_rows(dst, base, ld, nrows, max_rows, width):
+            """dst[i, :width] = heap[base + i*ld : +width], zero if i>=nrows."""
+            def body(i, _):
+                @pl.when(i < nrows)
+                def _():
+                    cp = pltpu.make_async_copy(
+                        heap.at[pl.ds(base + i * ld, width)],
+                        dst.at[i, pl.ds(0, width)], sem)
+                    cp.start()
+                    cp.wait()
+                @pl.when(jnp.logical_not(i < nrows))
+                def _():
+                    dst[i, pl.ds(0, width)] = jnp.zeros((width,), jnp.float32)
+                return 0
+            jax.lax.fori_loop(0, max_rows, body, 0)
+
+        def store_rows(src, base, ld, nrows, max_rows, width):
+            def body(i, _):
+                @pl.when(i < nrows)
+                def _():
+                    cp = pltpu.make_async_copy(
+                        src.at[i, pl.ds(0, width)],
+                        heap.at[pl.ds(base + i * ld, width)], sem)
+                    cp.start()
+                    cp.wait()
+                return 0
+            jax.lax.fori_loop(0, max_rows, body, 0)
+
+        def store_row_vec(vec_2d, row, base, width):
+            cp = pltpu.make_async_copy(
+                vec_2d.at[row, pl.ds(0, width)],
+                heap.at[pl.ds(base, width)], sem)
+            cp.start()
+            cp.wait()
+
+        cols = jax.lax.iota(jnp.int32, TN)
+
+        # ------------------------------------------------------------ kinds
+        def k_noop():
+            pass
+
+        def k_matmul():
+            m, n, k = d(1), d(2), d(3)
+            acc[...] = jnp.zeros((TM, TN), jnp.float32)
+            for kc in range(KCH):
+                k0 = kc * TKC
+                load_rows(sA, d(6) + k0, d(7), m, TM, TKC)
+                load_rows(sB, d(8) + k0 * d(9), d(9),
+                          jnp.clip(k - k0, 0, TKC), SB_ROWS, TN)
+                acc[...] += jax.lax.dot_general(
+                    sA[:, :TKC], sB[:TKC, :],
+                    (((1,), (0,)), ((), ())),
+                    preferred_element_type=jnp.float32)
+            y = acc[...]
+            @pl.when(d(10) >= 0)
+            def _():
+                load_rows(sC, d(10), 1, 1, 1, TN)
+            @pl.when(d(10) < 0)
+            def _():
+                sC[0, :] = jnp.zeros((TN,), jnp.float32)
+            y = y + sC[0, :][None, :]
+            y = _act(y, d(14))
+            acc[...] = y
+            store_rows(acc, d(4), d(5), m, TM, TN)
+
+        def k_rmsnorm():
+            m, n = d(1), d(2)
+            load_rows(sA, d(6), d(7), m, TM, TN)
+            load_rows(sC, d(10), 1, 1, 1, TN)
+            x = sA[:, :TN]
+            mean = jnp.sum(x * x, axis=1, keepdims=True) / n.astype(jnp.float32)
+            inv = jax.lax.rsqrt(mean + _f32(d(17)))
+            w = sC[0, :][None, :]
+            wg = jnp.where(d(14) == 1, 1.0 + w, w)
+            y = x * inv * wg
+            # keep pad columns zero (gemma's 1+w would leak 1·0=0 anyway)
+            y = jnp.where(cols[None, :] < n, y, 0.0)
+            acc[...] = y
+            store_rows(acc, d(4), d(5), m, TM, TN)
+
+        def k_rope():
+            m, n = d(1), d(2)
+            load_rows(sA, d(6), d(7), m, TM, TN)
+            half = HD // 2
+            inv_freq = THETA ** (-jnp.arange(0, half, dtype=jnp.float32)
+                                 / half)
+            is_mrope = d(15) == 1
+            pw = 4 if MROPE else 1
+            load_rows(sC, d(19), d(20), m, TM, pw)
+            if MROPE:
+                ang_parts = []
+                start = 0
+                for si, sec in enumerate(MROPE):
+                    ang_parts.append(sC[:TM, si][:, None]
+                                     * inv_freq[None, start:start + sec])
+                    start += sec
+                ang = jnp.concatenate(ang_parts, axis=1)
+            else:
+                ang = sC[:TM, 0][:, None] * inv_freq[None, :]
+            cosv, sinv = jnp.cos(ang), jnp.sin(ang)
+            y = sA[:, :TN]
+            out = jnp.zeros((TM, TN), jnp.float32)
+            for h in range(TN // HD):
+                x1 = y[:, h * HD : h * HD + half]
+                x2 = y[:, h * HD + half : (h + 1) * HD]
+                rot = jnp.concatenate(
+                    [x1 * cosv - x2 * sinv, x2 * cosv + x1 * sinv], axis=1)
+                out = jax.lax.dynamic_update_slice(out, rot, (0, h * HD))
+            acc[...] = out
+            store_rows(acc, d(4), d(5), m, TM, TN)
+
+        def k_glu():
+            m = d(1)
+            load_rows(sA, d(6), d(7), m, TM, TN)
+            load_rows(sD, d(8), d(9), m, TM, TN)
+            acc[...] = _act(sA[:, :TN], d(14)) * sD[:TM, :TN]
+            store_rows(acc, d(4), d(5), m, TM, TN)
+
+        def k_resid():
+            m = d(1)
+            load_rows(sA, d(6), d(7), m, TM, TN)
+            y = sA[:, :TN] * _f32(d(17))
+            @pl.when(d(8) >= 0)
+            def _():
+                load_rows(sD, d(8), d(9), m, TM, TN)
+            @pl.when(d(8) < 0)
+            def _():
+                sD[:TM, :] = jnp.zeros((TM, TN), jnp.float32)
+            acc[...] = y + sD[:TM, :TN]
+            store_rows(acc, d(4), d(5), m, TM, TN)
+
+        def k_attn():
+            m, n, s_len = d(1), d(2), d(3)
+            scale = _f32(d(17))
+            load_rows(sA, d(6), d(7), m, TM, TN)           # q tile
+            load_rows(sC, d(12), 1, 1, 1, TM)              # live lens row
+            for r in range(TM):
+                @pl.when(r < m)
+                def _(r=r):
+                    live = sC[0, r].astype(jnp.int32)
+                    row_out = jnp.zeros((TN,), jnp.float32)
+                    for gi in range(NG):
+                        qg = sA[r, gi * G * HD : (gi + 1) * G * HD]
+                        qm = qg.reshape(G, HD) * scale
+                        mrun = jnp.full((G,), -1e30, jnp.float32)
+                        lrun = jnp.zeros((G,), jnp.float32)
+                        arun = jnp.zeros((G, HD), jnp.float32)
+                        for sc in range(SCH):
+                            s0 = sc * TS
+                            valid = jnp.clip(live - s0, 0, TS)
+                            load_rows(sB, d(8) + r * d(15) + gi * HD
+                                      + s0 * d(9), d(9), valid, TS, HD)
+                            load_rows(sD, d(10) + r * d(15) + gi * HD
+                                      + s0 * d(11), d(11), valid, TS, HD)
+                            logits = jax.lax.dot_general(
+                                sB[:TS, :HD], qm,
+                                (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)  # (TS,G)
+                            srow = jax.lax.iota(jnp.int32, TS)
+                            logits = jnp.where(srow[:, None] < valid,
+                                               logits, -1e30)
+                            mnew = jnp.maximum(mrun,
+                                               jnp.max(logits, axis=0))
+                            p = jnp.exp(logits - mnew[None, :])
+                            corr = jnp.exp(mrun - mnew)
+                            lrun = lrun * corr + jnp.sum(p, axis=0)
+                            arun = arun * corr[:, None] + jax.lax.dot_general(
+                                p, sD[:TS, :HD],
+                                (((0,), (0,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+                            mrun = mnew
+                        og = (arun / jnp.maximum(lrun, 1e-30)[:, None]
+                              ).reshape(G * HD)
+                        row_out = jax.lax.dynamic_update_slice(
+                            row_out, og, (gi * G * HD,))
+                    acc[r, :] = row_out
+                    store_row_vec(acc, r, d(4) + r * d(5), TN)
+
+        def k_cache_update():
+            m = d(1)
+            load_rows(sA, d(6), d(7), m, TM, TN)           # new K/V rows
+            load_rows(sC, d(12), 1, 1, 1, TM)              # seq lens
+            for r in range(TM):
+                @pl.when(r < m)
+                def _(r=r):
+                    seq = sC[0, r].astype(jnp.int32)
+                    store_row_vec(sA, r, d(4) + r * d(15) + seq * d(5), TN)
+
+        def k_embed():
+            m = d(1)
+            load_rows(sC, d(6), 1, 1, 1, TM)               # token ids (f32)
+            for r in range(TM):
+                @pl.when(r < m)
+                def _(r=r):
+                    tok = sC[0, r].astype(jnp.int32)
+                    cp = pltpu.make_async_copy(
+                        heap.at[pl.ds(d(8) + tok * d(9), TN)],
+                        sA.at[r, pl.ds(0, TN)], sem)
+                    cp.start()
+                    cp.wait()
+                    store_row_vec(sA, r, d(4) + r * d(5), TN)
+
+        def k_softmax_topk():
+            m, n = d(1), d(2)
+            load_rows(sA, d(6), d(7), m, TM, TN)
+            masked = jnp.where(cols[None, :] < n, sA[:, :TN], -jnp.inf)
+            sel = jnp.zeros((TM, TN, TOPK), jnp.float32)
+            vals = jnp.zeros((TM, TOPK), jnp.float32)
+            for i in range(TOPK):
+                cmax = jnp.max(masked, axis=1, keepdims=True)
+                hit = (masked == cmax)
+                first = hit & (jnp.cumsum(hit.astype(jnp.int32), axis=1) == 1)
+                vals = vals.at[:, i].set(cmax[:, 0])
+                sel = sel.at[:, :, i].set(first.astype(jnp.float32))
+                masked = jnp.where(first, -jnp.inf, masked)
+            w = jax.nn.softmax(vals, axis=1)                  # (TM, K)
+            out = jnp.einsum("mek,mk->me", sel, w)
+            acc[...] = out
+            store_rows(acc, d(4), d(5), m, TM, TN)
+
+        def k_moe_gg():
+            m, n, k = d(1), d(2), d(3)
+            # router column for this expert -> per-token mask
+            def rbody(i, _):
+                @pl.when(i < m)
+                def _():
+                    cp = pltpu.make_async_copy(
+                        heap.at[pl.ds(d(10) + i * d(11), 1)],
+                        sC.at[1, pl.ds(i, 1)], sem)
+                    cp.start()
+                    cp.wait()
+                @pl.when(jnp.logical_not(i < m))
+                def _():
+                    sC[1, pl.ds(i, 1)] = jnp.zeros((1,), jnp.float32)
+                return 0
+            jax.lax.fori_loop(0, TM, rbody, 0)
+            mask = (sC[1, :TM] > 0).astype(jnp.float32)[:, None]
+            acc[...] = jnp.zeros((TM, TN), jnp.float32)
+            acc2[...] = jnp.zeros((TM, TN), jnp.float32)
+            for kc in range(KCH):
+                k0 = kc * TKC
+                load_rows(sA, d(6) + k0, d(7), m, TM, TKC)
+                xa = sA[:, :TKC] * mask
+                load_rows(sB, d(8) + k0 * d(9), d(9),
+                          jnp.clip(k - k0, 0, TKC), SB_ROWS, TN)
+                acc[...] += jax.lax.dot_general(
+                    xa, sB[:TKC, :], (((1,), (0,)), ((), ())),
+                    preferred_element_type=jnp.float32)
+                @pl.when(d(15) == 1)
+                def _():
+                    load_rows(sB, d(19) + k0 * d(9), d(9),
+                              jnp.clip(k - k0, 0, TKC), SB_ROWS, TN)
+                    acc2[...] += jax.lax.dot_general(
+                        xa, sB[:TKC, :], (((1,), (0,)), ((), ())),
+                        preferred_element_type=jnp.float32)
+            y = jnp.where(d(15) == 1,
+                          _act(acc[...], d(14)) * acc2[...],
+                          acc[...])
+            acc[...] = y
+            store_rows(acc, d(4), d(5), m, TM, TN)
+
+        def k_moe_combine():
+            m, n, n_exp = d(1), d(2), d(3)
+            acc[...] = jnp.zeros((TM, TN), jnp.float32)
+            for e in range(EMAX):
+                live = (e < n_exp)
+                load_rows(sD, d(6) + e * d(15), d(7),
+                          jnp.where(live, m, 0), TM, TN)
+                def rbody(i, _):
+                    @pl.when(jnp.logical_and(i < m, live))
+                    def _():
+                        cp = pltpu.make_async_copy(
+                            heap.at[pl.ds(d(10) + i * d(11) + e, 1)],
+                            sC.at[1, pl.ds(i, 1)], sem)
+                        cp.start()
+                        cp.wait()
+                    @pl.when(jnp.logical_not(jnp.logical_and(i < m, live)))
+                    def _():
+                        sC[1, pl.ds(i, 1)] = jnp.zeros((1,), jnp.float32)
+                    return 0
+                jax.lax.fori_loop(0, TM, rbody, 0)
+                acc[...] += sD[:TM, :TN] * sC[1, :TM][:, None]
+            store_rows(acc, d(4), d(5), m, TM, TN)
+
+        def k_ssm():
+            m = d(1)
+            load_rows(sA, d(6), d(7), m, TM, TN)           # x tile
+            load_rows(sC, d(12), 1, 1, 1, TN)              # A_log (head slc)
+            a_log = sC[0, :]
+            @pl.when(d(23) >= 0)
+            def _():
+                load_rows(sC, d(23), 1, 1, 1, TN)
+            dsk = jnp.where(d(23) >= 0, sC[0, :], 0.0)
+            # reload A_log into row 2 (sC[0] now holds D_skip)
+            load_rows(sC, d(12), 1, 1, 1, TN)
+            a_log = sC[0, :]
+            for r in range(TM):
+                @pl.when(r < m)
+                def _(r=r):
+                    load_rows(sC, d(10) + r * d(11), 1, 1, 1, TN)
+                    dt_row = sC[0, :]                       # dt (head slice)
+                    load_rows(sC, d(19) + r * d(20), 1, 1, 1, TN)
+                    bvec = sC[0, :NS]
+                    load_rows(sC, d(21) + r * d(22), 1, 1, 1, TN)
+                    cvec = sC[0, :NS]
+                    row_out = jnp.zeros((TN,), jnp.float32)
+                    for hh in range(NHT):
+                        base = d(8) + r * d(15) + hh * d(16)
+                        load_rows(sB, base, d(9), HDS, SB_ROWS, NS)
+                        x_h = sA[r, hh * HDS : (hh + 1) * HDS]
+                        dt_sp = jax.nn.softplus(dt_row[hh])
+                        da = jnp.exp(dt_sp * (-jnp.exp(a_log[hh])))
+                        new_state = (sB[:HDS, :NS] * da
+                                     + (dt_sp * x_h)[:, None] * bvec[None, :])
+                        y_h = new_state @ cvec + dsk[hh] * x_h
+                        sB[:HDS, :NS] = new_state
+                        store_rows(sB, base, d(9), HDS, SB_ROWS, NS)
+                        row_out = jax.lax.dynamic_update_slice(
+                            row_out, y_h, (hh * HDS,))
+                    acc[r, :] = row_out
+                    store_row_vec(acc, r, d(4) + r * d(5), TN)
+
+        def k_conv():
+            m = d(1)
+            load_rows(sA, d(6), d(7), m, TM, TN)           # x tile
+            load_rows(sB, d(10), d(11), WC, SB_ROWS, TN)   # conv_w (W, n)
+            @pl.when(d(12) >= 0)
+            def _():
+                load_rows(sC, d(12), 1, 1, 1, TN)
+            @pl.when(d(12) < 0)
+            def _():
+                sC[0, :] = jnp.zeros((TN,), jnp.float32)
+            bias = sC[0, :]
+            for r in range(TM):
+                @pl.when(r < m)
+                def _(r=r):
+                    base = d(8) + r * d(15)
+                    load_rows(sD, base, d(9), WC, WC, TN)
+                    rows = [sD[j, :TN] for j in range(1, WC)] + [sA[r, :TN]]
+                    y = bias
+                    for j in range(WC):
+                        sD[j, :] = rows[j]
+                        y = y + rows[j] * sB[j, :TN]
+                    store_rows(sD, base, d(9), WC, WC, TN)
+                    acc[r, :] = jax.nn.silu(y)
+                    store_row_vec(acc, r, d(4) + r * d(5), TN)
+
+        jax.lax.switch(d(0), [
+            k_noop, k_matmul, k_rmsnorm, k_rope, k_glu, k_resid, k_attn,
+            k_cache_update, k_embed, k_softmax_topk, k_moe_gg,
+            k_moe_combine, k_ssm, k_conv,
+        ])
+
+    sd_rows = max(TM, TS, WC, 8)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(num_tasks,),
+        in_specs=[pl.BlockSpec(memory_space=pl.ANY)],
+        out_specs=pl.BlockSpec(memory_space=pl.ANY),
+        scratch_shapes=[
+            pltpu.VMEM((TM, TNK), jnp.float32),        # sA
+            pltpu.VMEM((SB_ROWS, TN), jnp.float32),    # sB
+            pltpu.VMEM((max(8, TM), max(TN, TM)), jnp.float32),  # sC
+            pltpu.VMEM((sd_rows, TN), jnp.float32),    # sD
+            pltpu.VMEM((TM, TN), jnp.float32),         # acc
+            pltpu.VMEM((TM, TN), jnp.float32),         # acc2
+            pltpu.SemaphoreType.DMA,
+        ],
+    )
+    return functools.partial(
+        pl.pallas_call,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((heap_size,), jnp.float32),
+        input_output_aliases={1: 0},
+        interpret=True,
+    )(kernel)

@@ -1,0 +1,50 @@
+"""Public megakernel entry point: compile a decode graph once, then run
+the whole step as ONE pallas_call (the paper's single kernel launch)."""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from ...core.compile import CompileOptions, CompiledTGraph, megakernelize
+from ...core.decompose import DecomposeConfig
+from ...core.lowering import build_decode_graph, decode_bindings
+from .desc import MegakernelProgram, lower_tgraph
+from .kernel import make_megakernel
+
+__all__ = ["compile_decode_megakernel", "run_megakernel"]
+
+
+def compile_decode_megakernel(cfg, batch: int, max_seq: int,
+                              *, max_rows: int = 8,
+                              latency_aware: bool = True
+                              ) -> MegakernelProgram:
+    """Lower cfg's decode step end-to-end: op graph → tGraph → descriptors.
+
+    ``max_rows`` caps tile rows (the megakernel's TM) — decode batches are
+    small, so row tiles stay register-friendly.
+    """
+    g = build_decode_graph(cfg, batch, max_seq)
+    opts = CompileOptions(
+        decompose=DecomposeConfig(max_rows=max_rows),
+        latency_aware_schedule=latency_aware,
+    )
+    compiled = megakernelize(g, opts)
+    return lower_tgraph(compiled, cfg)
+
+
+def run_megakernel(prog: MegakernelProgram, cfg, params, cache,
+                   tokens_or_embeds, seq_lens,
+                   positions=None) -> Dict[str, np.ndarray]:
+    """Execute one decode step inside the megakernel; returns all graph
+    outputs (logits + updated caches/states) keyed by tensor name."""
+    bindings = decode_bindings(cfg, params, cache, tokens_or_embeds,
+                               seq_lens, positions)
+    heap = prog.build_heap(bindings)
+    kern = make_megakernel(prog.statics, len(prog.compiled.order),
+                           prog.heap_size)
+    out_heap = np.asarray(kern(jnp.asarray(prog.descs),
+                               jnp.asarray(heap)))
+    return {name: prog.read_output(out_heap, name)
+            for name in prog.compiled.graph.outputs}

@@ -1,0 +1,37 @@
+"""Row-tiled RMSNorm Pallas kernel (full feature row per tile, f32 stats)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["rmsnorm"]
+
+
+def _kernel(x_ref, w_ref, o_ref, *, eps: float):
+    x = x_ref[...].astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    y = x * jax.lax.rsqrt(var + eps) * w_ref[...].astype(jnp.float32)
+    o_ref[...] = y.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("block_rows", "eps", "interpret"))
+def rmsnorm(x: jax.Array, w: jax.Array, *, eps: float = 1e-6,
+            block_rows: int = 128, interpret: bool = True) -> jax.Array:
+    rows, d = x.shape
+    br = min(block_rows, rows)
+    assert rows % br == 0
+    return pl.pallas_call(
+        functools.partial(_kernel, eps=eps),
+        grid=(rows // br,),
+        in_specs=[
+            pl.BlockSpec((br, d), lambda i: (i, 0)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((br, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, d), x.dtype),
+        interpret=interpret,
+    )(x, w)

@@ -1,0 +1,146 @@
+"""ShapeDtypeStruct stand-ins + shardings for every (arch × shape) cell.
+
+``input_specs`` returns everything ``dryrun.py`` needs to lower a cell
+without allocating a single device buffer: the step callable, abstract
+arguments, and in/out shardings derived from the ShardingPolicy.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..configs import SHAPES, get_config
+from ..distributed.sharding import ShardingPolicy
+from ..models import init_cache, init_params, prefill_step, serve_step
+from ..training.trainer import make_train_step
+from ..training.optimizer import adamw_init
+
+__all__ = ["input_specs", "cell_supported"]
+
+SDS = jax.ShapeDtypeStruct
+
+
+def cell_supported(cfg, shape) -> Tuple[bool, str]:
+    """long_500k needs sub-quadratic attention (assignment rule)."""
+    if shape.name == "long_500k" and not cfg.sub_quadratic:
+        return False, "skipped: pure full-attention architecture"
+    return True, ""
+
+
+def _abstract(fn, *args, **kw):
+    return jax.eval_shape(lambda: fn(*args, **kw))
+
+
+def _tokens_spec(cfg, batch: int, seq: int | None, dtype=jnp.int32):
+    """Token ids, or stub frontend embeddings for [vlm]/[audio] archs."""
+    if cfg.embed_input:
+        shp = (batch, seq, cfg.d_model) if seq else (batch, cfg.d_model)
+        return SDS(shp, jnp.bfloat16)
+    shp = (batch, seq) if seq else (batch,)
+    return SDS(shp, dtype)
+
+
+def _positions_spec(cfg, batch: int, seq: int):
+    if cfg.mrope_sections is not None:
+        return SDS((batch, seq, 3), jnp.int32)
+    return SDS((batch, seq), jnp.int32)
+
+
+def input_specs(arch: str, shape_name: str, mesh, *,
+                microbatches: int = 1,
+                layers_override: int | None = None,
+                unroll: bool = False,
+                overrides: Dict[str, Any] | None = None) -> Dict[str, Any]:
+    cfg = get_config(arch)
+    if layers_override is not None:
+        cfg = dataclasses.replace(cfg, n_layers=layers_override)
+    shape = SHAPES[shape_name]
+    ok, why = cell_supported(cfg, shape)
+    if not ok:
+        raise ValueError(f"{arch}×{shape_name}: {why}")
+    overrides = overrides or {}
+    policy = ShardingPolicy.for_shape(cfg, mesh, shape,
+                                      overrides=overrides)
+    b, s = shape.global_batch, shape.seq_len
+    rep = NamedSharding(mesh, P())
+    shard = lambda spec_tree: policy.to_shardings(spec_tree)
+
+    if shape.step == "train":
+        params = _abstract(init_params, cfg, jax.random.PRNGKey(0),
+                           jnp.float32)
+        opt = _abstract(adamw_init, params)
+        batch = {
+            ("embeds" if cfg.embed_input else "tokens"):
+                _tokens_spec(cfg, b, s),
+            "positions": _positions_spec(cfg, b, s),
+            "labels": SDS((b, s), jnp.int32),
+        }
+        pspecs = policy.param_specs(params)
+        ospecs = {"m": pspecs, "v": pspecs, "step": P()}
+        bspecs = {k: P(policy.dp, *([None] * (v.ndim - 1)))
+                  for k, v in batch.items()}
+        step = make_train_step(cfg, policy=policy, mesh=mesh,
+                               microbatches=microbatches, unroll=unroll)
+        return {
+            "cfg": cfg, "shape": shape, "policy": policy,
+            "fn": step,
+            "args": (params, opt, batch),
+            "in_shardings": (shard(pspecs), shard(ospecs), shard(bspecs)),
+            "out_shardings": (shard(pspecs), shard(ospecs),
+                              {"loss": rep, "grad_norm": rep}),
+            "donate_argnums": (0, 1),
+        }
+
+    params = _abstract(init_params, cfg, jax.random.PRNGKey(0), jnp.bfloat16)
+    pspecs = policy.param_specs(params)
+
+    if shape.step == "prefill":
+        tokens = _tokens_spec(cfg, b, s)
+        positions = _positions_spec(cfg, b, s)
+
+        def pf(params, tok, pos):
+            return prefill_step(params, cfg, tok, pos, policy=policy,
+                                mesh=mesh, unroll=unroll)
+
+        logit_sh = NamedSharding(
+            mesh, P(*policy.act_spec("logits", 3)))
+        tok_sh = NamedSharding(mesh, policy.batch_spec(tokens.ndim))
+        pos_sh = NamedSharding(mesh, policy.batch_spec(positions.ndim))
+        return {
+            "cfg": cfg, "shape": shape, "policy": policy,
+            "fn": pf,
+            "args": (params, tokens, positions),
+            "in_shardings": (shard(pspecs), tok_sh, pos_sh),
+            "out_shardings": logit_sh,
+            "donate_argnums": (),
+        }
+
+    # decode: one new token against a seq_len-deep cache
+    kv_dtype = (jnp.float8_e4m3fn if overrides.get("kv_dtype_bytes") == 1
+                else None)
+    cache = _abstract(init_cache, cfg, b, s, jnp.bfloat16,
+                      kv_dtype=kv_dtype)
+    cspecs = policy.cache_specs(cache)
+    tokens = _tokens_spec(cfg, b, None)
+    seq_lens = SDS((b,), jnp.int32)
+
+    def dec(params, cache, tok, lens):
+        return serve_step(params, cfg, cache, tok, lens, policy=policy,
+                          mesh=mesh, unroll=unroll)
+
+    logit_sh = NamedSharding(mesh, P(*policy.act_spec("logits", 2)))
+    return {
+        "cfg": cfg, "shape": shape, "policy": policy,
+        "fn": dec,
+        "args": (params, cache, tokens, seq_lens),
+        "in_shardings": (shard(pspecs), shard(cspecs),
+                         NamedSharding(mesh, policy.batch_spec(tokens.ndim)),
+                         NamedSharding(mesh, policy.batch_spec(1))),
+        "out_shardings": (logit_sh, shard(cspecs)),
+        "donate_argnums": (1,),
+    }

@@ -1,0 +1,17 @@
+from .lm import (
+    init_params,
+    init_cache,
+    forward,
+    train_loss,
+    prefill_step,
+    serve_step,
+)
+
+__all__ = [
+    "init_params",
+    "init_cache",
+    "forward",
+    "train_loss",
+    "prefill_step",
+    "serve_step",
+]

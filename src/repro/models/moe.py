@@ -1,0 +1,249 @@
+"""Mixture-of-Experts FFN with expert parallelism (paper §6.4).
+
+Design (TPU adaptation of MPK's *hybrid workload balancer*):
+
+* **Static structure**: each expert gets a fixed capacity buffer of
+  ``C = ceil(T·K·cf / E)`` token rows — the AOT part.  All expert GEMMs are
+  dense batched einsums with exact, honest FLOPs (gather/scatter move data
+  but add no FLOPs; there is no one-hot dispatch einsum).
+* **Runtime refinement**: tokens are sorted by routed expert and the
+  per-expert counts (the paper's "meta-tensor produced by topk-softmax")
+  select which rows are live inside each capacity slice — the JIT part.
+* **Expert parallelism**: experts are sharded over the ``model`` mesh axis
+  with ``shard_map``; each shard computes only its local experts and the
+  per-token combine is a single ``psum`` over the model axis — the same
+  collective footprint as a Megatron TP MLP, so the MM→AR fine-grained
+  overlap story from the paper applies unchanged.
+
+Weight layout: router (D, E), w1 (E, D, 2, F) (gate/up split on axis -2 so
+the F axis shards cleanly), w2 (E, F, D).  Shared experts (llama4) use
+wi (D, 2, F), wo (F, D) and are folded into the same psum.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+__all__ = ["moe_ffn", "expert_capacity"]
+
+
+def expert_capacity(tokens: int, top_k: int, n_experts: int,
+                    capacity_factor: float) -> int:
+    return max(1, math.ceil(tokens * top_k * capacity_factor / n_experts))
+
+
+def _act(name: str):
+    return jax.nn.silu if name == "silu" else jax.nn.gelu
+
+
+def _moe_local(
+    x2d: jax.Array,            # (T, D) — local tokens, replicated over EP
+    router_w: jax.Array,       # (D, E) — replicated
+    w1: jax.Array,             # (E_loc, D, 2, F)
+    w2: jax.Array,             # (E_loc, F, D)
+    shared_wi: Optional[jax.Array],   # (D, 2, F_loc) or None
+    shared_wo: Optional[jax.Array],   # (F_loc, D) or None
+    *,
+    top_k: int,
+    n_experts: int,
+    capacity: int,
+    activation: str,
+    ep_axis: Optional[str],
+) -> jax.Array:
+    t, d = x2d.shape
+    e_loc = w1.shape[0]
+    act = _act(activation)
+
+    # ---- routing (the meta-tensor: counts per expert) ----
+    logits = (x2d @ router_w.astype(x2d.dtype)).astype(jnp.float32)
+    topw, topi = jax.lax.top_k(logits, top_k)             # (T, K)
+    topw = jax.nn.softmax(topw, axis=-1)
+    flat_ids = topi.reshape(-1)                           # (T*K,)
+    flat_w = topw.reshape(-1)
+    sort_idx = jnp.argsort(flat_ids)                      # (T*K,)
+    counts = jnp.bincount(flat_ids, length=n_experts)     # (E,)
+    offsets = jnp.cumsum(counts) - counts                 # exclusive
+
+    e0 = (jax.lax.axis_index(ep_axis) * e_loc) if ep_axis else 0
+    eids = e0 + jnp.arange(e_loc)                         # (E_loc,)
+    slot = jnp.arange(capacity)
+    pos = offsets[eids][:, None] + slot[None, :]          # (E_loc, C)
+    valid = slot[None, :] < counts[eids][:, None]
+    srows = sort_idx[jnp.clip(pos, 0, t * top_k - 1)]     # rows in sorted order
+    token = srows // top_k                                # (E_loc, C)
+
+    # ---- gather (0 FLOPs) + dense expert GEMMs (honest FLOPs) ----
+    xg = x2d[token] * valid[..., None].astype(x2d.dtype)  # (E_loc, C, D)
+    h = jnp.einsum("ecd,edgf->ecgf", xg, w1.astype(x2d.dtype))
+    h = act(h[..., 0, :]) * h[..., 1, :]                  # (E_loc, C, F)
+    yo = jnp.einsum("ecf,efd->ecd", h, w2.astype(x2d.dtype))
+
+    # ---- weighted scatter-combine ----
+    wrow = (flat_w[srows] * valid).astype(x2d.dtype)      # (E_loc, C)
+    tgt = jnp.where(valid, token, t)                      # t = dropped
+    y = jnp.zeros((t, d), x2d.dtype)
+    y = y.at[tgt.reshape(-1)].add(
+        (yo * wrow[..., None]).reshape(-1, d), mode="drop")
+
+    # ---- shared (always-on) experts, TP-sharded on F ----
+    if shared_wi is not None:
+        hs = jnp.einsum("td,dgf->tgf", x2d, shared_wi.astype(x2d.dtype))
+        hs = act(hs[..., 0, :]) * hs[..., 1, :]
+        y = y + hs @ shared_wo.astype(x2d.dtype)
+
+    if ep_axis:
+        y = jax.lax.psum(y, ep_axis)
+    return y
+
+
+def _moe_local_2d(
+    x2d: jax.Array,            # (T, D) — replicated (GSPMD gathers, ~MBs)
+    router_w: jax.Array,       # (D, E) — replicated
+    w1: jax.Array,             # (E_loc, D_loc, 2, F)   [EP × FSDP shards]
+    w2: jax.Array,             # (E_loc, F, D_loc)
+    shared_wi: Optional[jax.Array],   # (D_loc, 2, F_loc) or None
+    shared_wo: Optional[jax.Array],   # (F_loc, D_loc2?)  [F/model, D/data]
+    *,
+    top_k: int,
+    n_experts: int,
+    capacity: int,
+    activation: str,
+    ep_axis: str,
+    fsdp_axes: Tuple[str, ...],
+) -> jax.Array:
+    """2D expert GEMM: expert rows over ``ep_axis`` (model), the D
+    contraction over ``fsdp_axes`` (data) — matching the 2D weight storage
+    exactly, so the expert weights NEVER move.  Communication per layer is
+    activations-sized (x gather + two partial-sum reductions) instead of
+    weights-sized: the decode fix for ≥100B MoE archs whose weights can't
+    be EP-only resident."""
+    t, d = x2d.shape
+    e_loc, d_loc = w1.shape[0], w1.shape[1]
+    act = _act(activation)
+
+    logits = (x2d @ router_w.astype(x2d.dtype)).astype(jnp.float32)
+    topw, topi = jax.lax.top_k(logits, top_k)
+    topw = jax.nn.softmax(topw, axis=-1)
+    flat_ids = topi.reshape(-1)
+    flat_w = topw.reshape(-1)
+    sort_idx = jnp.argsort(flat_ids)
+    counts = jnp.bincount(flat_ids, length=n_experts)
+    offsets = jnp.cumsum(counts) - counts
+
+    e0 = jax.lax.axis_index(ep_axis) * e_loc
+    # linear index over the (possibly several) fsdp axes -> D-slice start
+    dlin = 0
+    for a in fsdp_axes:
+        dlin = dlin * jax.lax.axis_size(a) + jax.lax.axis_index(a)
+    d0 = dlin * d_loc
+
+    eids = e0 + jnp.arange(e_loc)
+    slot = jnp.arange(capacity)
+    pos = offsets[eids][:, None] + slot[None, :]
+    valid = slot[None, :] < counts[eids][:, None]
+    srows = sort_idx[jnp.clip(pos, 0, t * top_k - 1)]
+    token = srows // top_k
+
+    xg = x2d[token] * valid[..., None].astype(x2d.dtype)   # (E_loc, C, D)
+    xg_slice = jax.lax.dynamic_slice_in_dim(xg, d0, d_loc, axis=2)
+    h = jnp.einsum("ecd,edgf->ecgf", xg_slice, w1.astype(x2d.dtype))
+    h = jax.lax.psum(h, fsdp_axes)                  # full-D contraction
+    h = act(h[..., 0, :]) * h[..., 1, :]            # (E_loc, C, F)
+    yo = jnp.einsum("ecf,efd->ecd", h, w2.astype(x2d.dtype))
+
+    wrow = (flat_w[srows] * valid).astype(x2d.dtype)
+    tgt = jnp.where(valid, token, t)
+    y = jnp.zeros((t, d_loc), x2d.dtype)
+    y = y.at[tgt.reshape(-1)].add(
+        (yo * wrow[..., None]).reshape(-1, d_loc), mode="drop")
+
+    if shared_wi is not None:
+        xs = jax.lax.dynamic_slice_in_dim(x2d, d0, d_loc, axis=1)
+        hs = jnp.einsum("td,dgf->tgf", xs, shared_wi.astype(x2d.dtype))
+        hs = jax.lax.psum(hs, fsdp_axes)            # (T, 2, F_loc)
+        hs = act(hs[..., 0, :]) * hs[..., 1, :]
+        ys = hs @ shared_wo.astype(x2d.dtype)       # partial over F (model)
+        y = y + ys
+    y = jax.lax.psum(y, ep_axis)                    # combine experts (+F)
+    return y                                        # (T, D_loc) over data
+
+
+def moe_ffn(
+    x2d: jax.Array,
+    p: Dict[str, jax.Array],
+    cfg: Any,
+    *,
+    mesh=None,
+    ep_axis: str = "model",
+    dp_axes: Optional[Tuple[str, ...]] = ("data",),
+    fsdp_axes: Tuple[str, ...] = (),
+    two_d: bool = False,
+    capacity_factor: Optional[float] = None,
+) -> jax.Array:
+    """MoE FFN over flat tokens (T, D).
+
+    With ``mesh``: expert-parallel via shard_map (experts over ``ep_axis``,
+    tokens over ``dp_axes``).  Without: single-shard reference semantics
+    (used by smoke tests and the tGraph oracle).
+    """
+    cf = capacity_factor if capacity_factor is not None else cfg.capacity_factor
+    has_shared = "shared_wi" in p
+    if mesh is None:
+        cap = expert_capacity(x2d.shape[0], cfg.top_k, cfg.n_experts, cf)
+        return _moe_local(
+            x2d, p["router"], p["w1"], p["w2"],
+            p.get("shared_wi"), p.get("shared_wo"),
+            top_k=cfg.top_k, n_experts=cfg.n_experts, capacity=cap,
+            activation=cfg.activation, ep_axis=None)
+
+    if two_d and fsdp_axes:
+        # 2D path (decode + FSDP weights): tokens replicated at entry
+        # (T·D is MBs), weights stay exactly as stored.
+        cap = expert_capacity(x2d.shape[0], cfg.top_k, cfg.n_experts, cf)
+        in_specs = [P(None, None), P(None, None),
+                    P(ep_axis, fsdp_axes, None, None),
+                    P(ep_axis, None, fsdp_axes)]
+        args = [x2d, p["router"], p["w1"], p["w2"]]
+        if has_shared:
+            in_specs += [P(fsdp_axes, None, ep_axis), P(ep_axis, fsdp_axes)]
+            args += [p["shared_wi"], p["shared_wo"]]
+        else:
+            in_specs += [None, None]
+            args += [None, None]
+        fn = partial(
+            _moe_local_2d,
+            top_k=cfg.top_k, n_experts=cfg.n_experts, capacity=cap,
+            activation=cfg.activation, ep_axis=ep_axis,
+            fsdp_axes=tuple(fsdp_axes))
+        return jax.shard_map(
+            fn, mesh=mesh, in_specs=tuple(in_specs),
+            out_specs=P(None, fsdp_axes), check_vma=False,
+        )(*args)
+
+    denom = math.prod(mesh.shape[a] for a in dp_axes) if dp_axes else 1
+    t_local = x2d.shape[0] // denom
+    cap = expert_capacity(t_local, cfg.top_k, cfg.n_experts, cf)
+    dp = P(dp_axes, None) if dp_axes else P(None, None)
+    in_specs = [dp, P(None, None), P(ep_axis, None, None, None),
+                P(ep_axis, None, None)]
+    args = [x2d, p["router"], p["w1"], p["w2"]]
+    if has_shared:
+        in_specs += [P(None, None, ep_axis), P(ep_axis, None)]
+        args += [p["shared_wi"], p["shared_wo"]]
+    else:
+        in_specs += [None, None]
+        args += [None, None]
+
+    fn = partial(
+        _moe_local,
+        top_k=cfg.top_k, n_experts=cfg.n_experts, capacity=cap,
+        activation=cfg.activation, ep_axis=ep_axis)
+    return jax.shard_map(
+        fn, mesh=mesh, in_specs=tuple(in_specs), out_specs=dp,
+        check_vma=False,
+    )(*args)

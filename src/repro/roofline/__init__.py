@@ -1,0 +1,5 @@
+from .hw import HW, TPU_V5E
+from .analysis import collective_bytes, parse_hlo_collectives, roofline_terms
+
+__all__ = ["HW", "TPU_V5E", "collective_bytes", "parse_hlo_collectives",
+           "roofline_terms"]

@@ -1,0 +1,136 @@
+"""Roofline-term extraction from compiled dry-run artifacts.
+
+  compute term    = HLO_FLOPs(per device) / peak_FLOP/s
+  memory term     = HLO_bytes(per device) / HBM_bw
+  collective term = collective_bytes(per device, on the wire) / (links × link_bw)
+
+``cost_analysis`` on an SPMD-compiled executable reports the per-device
+partitioned module, so no division by chip count is needed.  Collective
+bytes are *not* in cost_analysis: we parse the compiled HLO and apply
+standard ring formulas per op kind and replica-group size.
+"""
+from __future__ import annotations
+
+import re
+from typing import Any, Dict, Optional
+
+import numpy as np
+
+from .hw import HW, TPU_V5E
+
+__all__ = ["collective_bytes", "roofline_terms", "parse_hlo_collectives"]
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1,
+}
+
+#: result-shape regex: ``f32[8,128]{1,0}`` or tuple ``(f32[8], f32[8])``
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_OP_RE = re.compile(
+    r"=\s*(\([^)]*\)|[\w\[\]{},:#\* ]+?)\s*"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(",
+)
+_GROUPS_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+_GROUPS_V2_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def parse_hlo_collectives(hlo_text: str) -> Dict[str, Any]:
+    """Per-kind result-bytes and wire-bytes from a compiled HLO module."""
+    per_kind: Dict[str, float] = {}
+    wire = 0.0
+    count = 0
+    for line in hlo_text.splitlines():
+        m = _OP_RE.search(line)
+        if m is None:
+            continue
+        if "-done(" in line:
+            continue  # paired with -start; count once
+        shape_str, kind = m.group(1), m.group(2)
+        nbytes = _shape_bytes(shape_str)
+        if nbytes == 0:
+            continue
+        # replica-group size (ring length)
+        g = 1
+        gm = _GROUPS_RE.search(line)
+        if gm:
+            g = len(gm.group(1).split(","))
+        else:
+            gm2 = _GROUPS_V2_RE.search(line)
+            if gm2:
+                g = int(gm2.group(2))
+        count += 1
+        # Standard ring-algorithm wire bytes per device, from the *result*
+        # shape (which is what the HLO line carries):
+        #   all-reduce:        result == input; 2 · (g-1)/g · bytes
+        #   all-gather:        result is the gathered tensor; (g-1)/g · bytes
+        #   reduce-scatter:    result is the scattered shard; (g-1) · bytes
+        #   all-to-all:        result == input; (g-1)/g · bytes
+        #   collective-permute: result == input; bytes (no group concept)
+        if kind == "collective-permute":
+            per_kind[kind] = per_kind.get(kind, 0.0) + nbytes
+            wire += nbytes
+            continue
+        if g <= 1:
+            continue
+        if kind == "all-reduce":
+            w = 2 * (g - 1) / g * nbytes
+        elif kind == "all-gather":
+            w = (g - 1) / g * nbytes
+        elif kind == "reduce-scatter":
+            w = (g - 1) * nbytes
+        elif kind == "all-to-all":
+            w = (g - 1) / g * nbytes
+        else:  # collective-permute
+            w = nbytes
+        per_kind[kind] = per_kind.get(kind, 0.0) + w
+        wire += w
+    return {"wire_bytes": wire, "per_kind": per_kind, "num_ops": count}
+
+
+def collective_bytes(compiled) -> Dict[str, Any]:
+    return parse_hlo_collectives(compiled.as_text())
+
+
+def roofline_terms(
+    flops: float,
+    hbm_bytes: float,
+    wire_bytes: float,
+    *,
+    hw: HW = TPU_V5E,
+    model_flops_per_device: Optional[float] = None,
+) -> Dict[str, Any]:
+    t_compute = flops / hw.peak_flops_bf16
+    t_memory = hbm_bytes / hw.hbm_bw
+    t_coll = wire_bytes / (hw.ici_links * hw.ici_link_bw)
+    terms = {"compute_s": t_compute, "memory_s": t_memory,
+             "collective_s": t_coll}
+    dominant = max(terms, key=terms.get)
+    bound = max(terms.values())
+    out = {
+        **terms,
+        "dominant": dominant.replace("_s", ""),
+        "roofline_bound_s": bound,
+        # fraction of the bound that is useful compute — the score axis
+        "compute_fraction_of_bound": (t_compute / bound) if bound else 0.0,
+    }
+    if model_flops_per_device:
+        out["model_flops_per_device"] = model_flops_per_device
+        out["useful_flop_ratio"] = (
+            model_flops_per_device / flops if flops else 0.0)
+    return out

@@ -1,0 +1,26 @@
+"""Hardware model used for the roofline terms (TPU v5e-class chip)."""
+from __future__ import annotations
+
+import dataclasses
+
+__all__ = ["HW", "TPU_V5E"]
+
+
+@dataclasses.dataclass(frozen=True)
+class HW:
+    name: str
+    peak_flops_bf16: float   # FLOP/s per chip
+    hbm_bw: float            # bytes/s per chip
+    ici_link_bw: float       # bytes/s per link
+    ici_links: int           # links per chip (2D torus -> 4)
+    hbm_bytes: float         # capacity per chip
+
+
+TPU_V5E = HW(
+    name="tpu-v5e",
+    peak_flops_bf16=197e12,
+    hbm_bw=819e9,
+    ici_link_bw=50e9,
+    ici_links=4,
+    hbm_bytes=16e9,
+)

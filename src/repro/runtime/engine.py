@@ -1,0 +1,130 @@
+"""Continuous-batching serving engine (paper §6.1).
+
+Every decode iteration: (1) remove finished requests, (2) admit newly
+arrived ones, (3) update per-request KV metadata, then run one
+``serve_step`` over the whole batch — the same loop the paper executes as
+the start-event task of each tGraph iteration.  Like the paper's
+per-batch-size tGraph specialization, the engine holds a cache of jitted
+step functions keyed by the power-of-two batch bucket and dispatches to
+the smallest bucket that fits the live batch.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..models import init_cache, serve_step
+from .kv_cache import PagedKVCache
+
+__all__ = ["Request", "ServingEngine"]
+
+
+@dataclasses.dataclass
+class Request:
+    request_id: int
+    prompt: List[int]
+    max_new_tokens: int = 16
+    output: List[int] = dataclasses.field(default_factory=list)
+    slot: int = -1
+
+    @property
+    def done(self) -> bool:
+        return len(self.output) >= self.max_new_tokens
+
+
+class ServingEngine:
+    """Single-host reference engine driving ``serve_step``.
+
+    ``prefill`` is performed token-by-token through the decode path (exact
+    same numerics); a chunked-prefill fast path is a recorded extension.
+    """
+
+    def __init__(self, cfg, params, *, max_slots: int = 8,
+                 max_seq: int = 128, page_size: int = 32,
+                 greedy: bool = True):
+        self.cfg = cfg
+        self.params = params
+        self.kv = PagedKVCache(max_slots, max_seq, page_size)
+        self.cache = init_cache(cfg, max_slots, max_seq, dtype=jnp.float32)
+        self.waiting: List[Request] = []
+        self.running: Dict[int, Request] = {}
+        self.finished: List[Request] = []
+        self.greedy = greedy
+        self._steps: Dict[int, Callable] = {}  # batch-bucket -> jitted step
+        self.iterations = 0
+        self._slot_tokens = np.zeros((max_slots,), np.int64)
+        self._pending_prefill: Dict[int, List[int]] = {}
+
+    # ------------------------------------------------------------- public
+    def submit(self, req: Request) -> None:
+        self.waiting.append(req)
+
+    def _bucket(self, n: int) -> int:
+        b = 1
+        while b < n:
+            b *= 2
+        return min(b, self.kv.n_slots)
+
+    def _step_fn(self, bucket: int) -> Callable:
+        if bucket not in self._steps:
+            cfg = self.cfg
+
+            def fn(params, cache, tokens, seq_lens):
+                return serve_step(params, cfg, cache, tokens, seq_lens)
+
+            self._steps[bucket] = jax.jit(fn, donate_argnums=(1,))
+        return self._steps[bucket]
+
+    def step(self) -> int:
+        """One serving iteration; returns number of live requests."""
+        # (1) retire finished
+        for rid in [r for r, q in self.running.items() if q.done]:
+            req = self.running.pop(rid)
+            self.kv.release(rid)
+            self.finished.append(req)
+        # (2) admit new
+        while self.waiting and self.kv.can_admit(len(self.waiting[0].prompt)):
+            req = self.waiting.pop(0)
+            req.slot = self.kv.admit(req.request_id, 0)
+            self.running[req.request_id] = req
+            self._pending_prefill[req.request_id] = list(req.prompt)
+        if not self.running:
+            return 0
+        # (3) build the step batch: next prompt token (prefill phase) or
+        # the previously sampled token (decode phase) per slot
+        seq_lens = np.asarray(self.kv.seq_lens(), np.int32)
+        tokens = np.zeros((self.kv.n_slots,), np.int32)
+        for rid, req in self.running.items():
+            pending = self._pending_prefill.get(rid)
+            if pending:
+                tokens[req.slot] = pending.pop(0)
+            else:
+                tokens[req.slot] = self._slot_tokens[req.slot]
+        step = self._step_fn(self._bucket(len(self.running)))
+        logits, self.cache = step(self.params, self.cache,
+                                  jnp.asarray(tokens),
+                                  jnp.asarray(seq_lens))
+        logits = np.asarray(logits)
+        # (4) sample + bookkeeping
+        for rid, req in list(self.running.items()):
+            nxt = int(np.argmax(logits[req.slot]))
+            self.kv.advance(rid)
+            pending = self._pending_prefill.get(rid)
+            if pending is not None and not pending:
+                del self._pending_prefill[rid]
+                pending = None
+            if pending is None:
+                req.output.append(nxt)
+            self._slot_tokens[req.slot] = nxt
+        self.iterations += 1
+        return len(self.running)
+
+    def run(self, max_iterations: int = 10_000) -> List[Request]:
+        while (self.waiting or self.running) and \
+                self.iterations < max_iterations:
+            self.step()
+        return self.finished

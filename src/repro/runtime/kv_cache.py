@@ -1,0 +1,88 @@
+"""Paged KV-cache manager (paper §6.1: paged attention + in-kernel page
+allocation).
+
+Physical cache layout stays the dense (nb, na, B_slots, S_max, KV, hd)
+arrays the models consume; *logical* requests are mapped onto batch slots
+and page-granular sequence quota by this allocator.  Matching the paper,
+page allocation is metadata-only (no tensor copies): admitting/evicting a
+request flips slot ownership and the per-slot ``seq_lens`` entry, which is
+exactly the state the paper's scheduler updates when "processing the start
+event of a tGraph".
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+__all__ = ["PagedKVCache"]
+
+
+@dataclasses.dataclass
+class _Slot:
+    request_id: Optional[int] = None
+    seq_len: int = 0
+
+
+class PagedKVCache:
+    """Slot + page bookkeeping over a fixed (B_slots, S_max) physical cache."""
+
+    def __init__(self, n_slots: int, max_seq: int, page_size: int = 256):
+        assert max_seq % page_size == 0
+        self.n_slots = n_slots
+        self.max_seq = max_seq
+        self.page_size = page_size
+        self.total_pages = n_slots * (max_seq // page_size)
+        self.slots: List[_Slot] = [_Slot() for _ in range(n_slots)]
+        self.by_request: Dict[int, int] = {}
+
+    # -------------------------------------------------------------- pages
+    def pages_of(self, seq_len: int) -> int:
+        return -(-max(seq_len, 1) // self.page_size)
+
+    @property
+    def used_pages(self) -> int:
+        return sum(self.pages_of(s.seq_len) for s in self.slots
+                   if s.request_id is not None)
+
+    @property
+    def free_pages(self) -> int:
+        return self.total_pages - self.used_pages
+
+    # -------------------------------------------------------------- admit
+    def can_admit(self, prompt_len: int) -> bool:
+        return (any(s.request_id is None for s in self.slots)
+                and self.pages_of(prompt_len) <= self.free_pages
+                and prompt_len < self.max_seq)
+
+    def admit(self, request_id: int, prompt_len: int) -> int:
+        """Assign a slot; returns the slot index."""
+        assert self.can_admit(prompt_len), "admission check failed"
+        for i, s in enumerate(self.slots):
+            if s.request_id is None:
+                s.request_id = request_id
+                s.seq_len = prompt_len
+                self.by_request[request_id] = i
+                return i
+        raise RuntimeError("unreachable")
+
+    def advance(self, request_id: int) -> int:
+        """One decoded token; returns the new seq_len."""
+        s = self.slots[self.by_request[request_id]]
+        s.seq_len += 1
+        assert s.seq_len <= self.max_seq
+        return s.seq_len
+
+    def release(self, request_id: int) -> None:
+        i = self.by_request.pop(request_id)
+        self.slots[i] = _Slot()
+
+    # ------------------------------------------------------------- views
+    def seq_lens(self) -> List[int]:
+        """Per-slot live lengths (0 for empty slots — predicated out, the
+        JIT-task analogue: inactive rows cost no useful work)."""
+        return [s.seq_len if s.request_id is not None else 0
+                for s in self.slots]
+
+    def active_slots(self) -> List[int]:
+        return [i for i, s in enumerate(self.slots)
+                if s.request_id is not None]

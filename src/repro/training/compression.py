@@ -1,0 +1,49 @@
+"""Gradient compression with error feedback (cross-pod hop).
+
+int8 block-quantization: g ≈ scale · q, q ∈ int8, per-block scales.  The
+quantization residual is fed back into the next step's gradient (error
+feedback), which keeps SGD convergence (Karimireddy et al., 2019).  In the
+multi-pod mesh this halves-to-quarters the *cross-pod* gradient traffic —
+the slowest hop — while the pod-local reduction stays full precision
+(hierarchical reduction, see DESIGN.md §5).
+"""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["init_error_state", "compress_decompress", "make_compressor"]
+
+
+def init_error_state(params):
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def _quant_dequant(g: jax.Array, block: int = 256) -> jax.Array:
+    flat = g.astype(jnp.float32).reshape(-1)
+    pad = (-flat.shape[0]) % block
+    fp = jnp.pad(flat, (0, pad)).reshape(-1, block)
+    scale = jnp.max(jnp.abs(fp), axis=1, keepdims=True) / 127.0
+    scale = jnp.maximum(scale, 1e-12)
+    q = jnp.clip(jnp.round(fp / scale), -127, 127).astype(jnp.int8)
+    deq = q.astype(jnp.float32) * scale
+    return deq.reshape(-1)[: flat.shape[0]].reshape(g.shape)
+
+
+def compress_decompress(grads, error_state) -> Tuple[Any, Any]:
+    """Apply error feedback + int8 quantize/dequantize; returns the
+    decompressed gradients (what the reduction transports) and the new
+    error state."""
+    def one(g, e):
+        corrected = g.astype(jnp.float32) + e
+        deq = _quant_dequant(corrected)
+        return deq.astype(g.dtype), corrected - deq
+
+    out = jax.tree.map(one, grads, error_state)
+    new_g = jax.tree.map(lambda t: t[0], out,
+                         is_leaf=lambda t: isinstance(t, tuple))
+    new_e = jax.tree.map(lambda t: t[1], out,
+                         is_leaf=lambda t: isinstance(t, tuple))
+    return new_g, new_e

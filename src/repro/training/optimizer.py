@@ -1,0 +1,66 @@
+"""Sharded AdamW with reduced-precision moments.
+
+Parameters are stored float32 (the master copy) and cast to bfloat16 at the
+top of the forward pass; first/second moments are stored bfloat16 by default
+(8 bytes/param total vs 16 for vanilla f32 Adam) so that even the ≈400B
+assigned architectures fit a 256-chip pod — sharded like the parameters, so
+this is ZeRO-style optimizer-state partitioning for free under GSPMD.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["adamw_init", "adamw_update", "cast_params"]
+
+
+def adamw_init(params, moment_dtype=jnp.bfloat16) -> Dict[str, Any]:
+    zeros = lambda p: jnp.zeros(p.shape, moment_dtype)
+    return {
+        "m": jax.tree.map(zeros, params),
+        "v": jax.tree.map(zeros, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def cast_params(params, dtype=jnp.bfloat16):
+    """Compute-precision view of the f32 master params."""
+    return jax.tree.map(
+        lambda p: p.astype(dtype) if p.dtype == jnp.float32 else p, params)
+
+
+def adamw_update(
+    params,
+    grads,
+    state: Dict[str, Any],
+    *,
+    lr: float = 3e-4,
+    b1: float = 0.9,
+    b2: float = 0.95,
+    eps: float = 1e-8,
+    weight_decay: float = 0.1,
+) -> Tuple[Any, Dict[str, Any]]:
+    step = state["step"] + 1
+    c1 = 1.0 - b1 ** step.astype(jnp.float32)
+    c2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        gf = g.astype(jnp.float32)
+        mf = b1 * m.astype(jnp.float32) + (1 - b1) * gf
+        vf = b2 * v.astype(jnp.float32) + (1 - b2) * gf * gf
+        mhat = mf / c1
+        vhat = vf / c2
+        pf = p.astype(jnp.float32)
+        pnew = pf - lr * (mhat / (jnp.sqrt(vhat) + eps) + weight_decay * pf)
+        return pnew.astype(p.dtype), mf.astype(m.dtype), vf.astype(v.dtype)
+
+    out = jax.tree.map(upd, params, grads, state["m"], state["v"])
+    new_params = jax.tree.map(lambda t: t[0], out,
+                              is_leaf=lambda t: isinstance(t, tuple))
+    new_m = jax.tree.map(lambda t: t[1], out,
+                         is_leaf=lambda t: isinstance(t, tuple))
+    new_v = jax.tree.map(lambda t: t[2], out,
+                         is_leaf=lambda t: isinstance(t, tuple))
+    return new_params, {"m": new_m, "v": new_v, "step": step}

@@ -1,0 +1,103 @@
+"""Checkpointing: roundtrip (incl. bfloat16), atomic commit, checksum
+verification, async save, and elastic restore with resharding."""
+import json
+import shutil
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.ckpt import (HeartbeatMonitor, latest_step, restore_checkpoint,
+                        save_checkpoint)
+
+
+def _tree():
+    return {
+        "params": {"w": jnp.arange(12, dtype=jnp.float32).reshape(3, 4),
+                   "b16": jnp.ones((4, 2), jnp.bfloat16) * 1.5},
+        "opt": {"step": jnp.int32(7)},
+    }
+
+
+def test_roundtrip(tmp_path):
+    tree = _tree()
+    save_checkpoint(tmp_path, 3, tree)
+    got, step = restore_checkpoint(tmp_path)
+    assert step == 3
+    np.testing.assert_array_equal(got["params"]["w"],
+                                  np.asarray(tree["params"]["w"]))
+    assert got["params"]["b16"].dtype == jnp.bfloat16
+    np.testing.assert_array_equal(
+        np.asarray(got["params"]["b16"], np.float32),
+        np.asarray(tree["params"]["b16"], np.float32))
+    assert int(got["opt"]["step"]) == 7
+
+
+def test_latest_and_atomicity(tmp_path):
+    save_checkpoint(tmp_path, 1, _tree())
+    save_checkpoint(tmp_path, 5, _tree())
+    # a crashed (uncommitted) save must be invisible
+    fake = Path(tmp_path) / "step_00000009.tmp"
+    fake.mkdir()
+    (fake / "manifest.json").write_text("{}")
+    assert latest_step(tmp_path) == 5
+    # a directory without COMMIT is also invisible
+    fake2 = Path(tmp_path) / "step_00000010"
+    fake2.mkdir()
+    (fake2 / "manifest.json").write_text("{}")
+    assert latest_step(tmp_path) == 5
+
+
+def test_checksum_detects_corruption(tmp_path):
+    save_checkpoint(tmp_path, 2, _tree())
+    step_dir = Path(tmp_path) / "step_00000002"
+    manifest = json.loads((step_dir / "manifest.json").read_text())
+    victim = next(iter(manifest.values()))["file"]
+    arr = np.load(step_dir / victim).copy()
+    flat = arr.view(np.uint8).reshape(-1)
+    flat[0] ^= 0xFF
+    np.save(step_dir / victim, arr)
+    with pytest.raises(IOError):
+        restore_checkpoint(tmp_path, 2)
+    # verify=False tolerates it (operator override)
+    restore_checkpoint(tmp_path, 2, verify=False)
+
+
+def test_async_save(tmp_path):
+    th = save_checkpoint(tmp_path, 4, _tree(), async_save=True)
+    th.join(timeout=30)
+    assert latest_step(tmp_path) == 4
+
+
+def test_elastic_restore_resharding(tmp_path):
+    """Restore with explicit shardings onto the (1-device) mesh — the
+    code path elastic rescale uses."""
+    from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+    tree = _tree()
+    save_checkpoint(tmp_path, 1, tree)
+    mesh = Mesh(np.array(jax.devices()[:1]).reshape(1, 1),
+                ("data", "model"))
+    shardings = jax.tree.map(
+        lambda _: NamedSharding(mesh, P()), tree)
+    got, step = restore_checkpoint(tmp_path, shardings=shardings)
+    assert got["params"]["w"].sharding.mesh.shape["data"] == 1
+
+
+def test_heartbeat_monitor():
+    t = [0.0]
+    clock = lambda: t[0]
+    mon = HeartbeatMonitor(["h0", "h1", "h2"], timeout=10.0,
+                           straggler_factor=1.5, clock=clock)
+    for _ in range(5):
+        mon.beat("h0", 1.0)
+        mon.beat("h1", 1.0)
+        mon.beat("h2", 4.0)   # straggler
+    assert mon.stragglers() == ["h2"]
+    t[0] = 15.0
+    mon.beat("h0", 1.0)
+    t[0] = 20.0
+    assert set(mon.dead()) == {"h1", "h2"}
+    assert mon.healthy() == ["h0"]

@@ -1,0 +1,66 @@
+"""Per-kernel shape/dtype sweeps against the pure-jnp oracles
+(interpret=True executes the kernel bodies on CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import flash_attention, matmul, rmsnorm
+from repro.kernels.ref import (flash_attention_ref, matmul_ref, rmsnorm_ref)
+
+KEY = jax.random.PRNGKey(0)
+
+
+@pytest.mark.parametrize("m,k,n", [(128, 128, 128), (256, 384, 128),
+                                   (128, 512, 256), (384, 128, 384)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_matmul(m, k, n, dtype):
+    a = jax.random.normal(KEY, (m, k), dtype)
+    b = jax.random.normal(jax.random.PRNGKey(1), (k, n), dtype)
+    out = matmul(a, b)
+    ref = matmul_ref(a, b)
+    tol = 1e-4 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("rows,d", [(128, 256), (256, 512), (384, 128)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_rmsnorm(rows, d, dtype):
+    x = jax.random.normal(KEY, (rows, d), dtype)
+    w = jax.random.normal(jax.random.PRNGKey(1), (d,), dtype)
+    out = rmsnorm(x, w)
+    ref = rmsnorm_ref(x, w)
+    tol = 1e-5 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("s,h,hd,bq,bk", [
+    (128, 2, 64, 64, 64), (256, 4, 64, 128, 64), (128, 2, 128, 64, 128),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention(s, h, hd, bq, bk, dtype):
+    b = 2
+    q = jax.random.normal(KEY, (b, s, h, hd), dtype)
+    k = jax.random.normal(jax.random.PRNGKey(1), (b, s, h, hd), dtype)
+    v = jax.random.normal(jax.random.PRNGKey(2), (b, s, h, hd), dtype)
+    out = flash_attention(q, k, v, bq=bq, bk=bk)
+    ref = flash_attention_ref(q, k, v)
+    tol = 2e-5 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               rtol=tol, atol=tol)
+
+
+def test_flash_attention_noncausal():
+    b, s, h, hd = 1, 128, 2, 64
+    q = jax.random.normal(KEY, (b, s, h, hd), jnp.float32)
+    k = jax.random.normal(jax.random.PRNGKey(1), (b, s, h, hd), jnp.float32)
+    v = jax.random.normal(jax.random.PRNGKey(2), (b, s, h, hd), jnp.float32)
+    out = flash_attention(q, k, v, bq=64, bk=64, causal=False)
+    ref = flash_attention_ref(q, k, v, causal=False)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)

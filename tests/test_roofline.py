@@ -1,0 +1,49 @@
+"""Roofline machinery: HLO collective parser, ring formulas, terms."""
+import numpy as np
+
+from repro.roofline import parse_hlo_collectives, roofline_terms
+from repro.roofline.analysis import _shape_bytes
+
+HLO = """
+HloModule test
+  %x = f32[8,128]{1,0} parameter(0)
+  %ar = f32[8,128]{1,0} all-reduce(f32[8,128]{1,0} %x), replica_groups={{0,1,2,3}}, to_apply=%add
+  %ag = bf16[16,256]{1,0} all-gather(bf16[4,256]{1,0} %y), replica_groups={{0,1,2,3,4,5,6,7}}, dimensions={0}
+  %rs = f32[2,128]{1,0} reduce-scatter(f32[8,128]{1,0} %x), replica_groups={{0,1,2,3}}, to_apply=%add
+  %cp = f32[128]{0} collective-permute(f32[128]{0} %z), source_target_pairs={{0,1}}
+  %aa = f32[64]{0} all-to-all(f32[64]{0} %w), replica_groups={{0,1}}
+  %st = f32[8,8]{1,0} all-reduce-start(f32[8,8]{1,0} %q), replica_groups={{0,1}}
+  %dn = f32[8,8]{1,0} all-reduce-done(f32[8,8]{1,0} %st)
+"""
+
+
+def test_shape_bytes():
+    assert _shape_bytes("f32[8,128]{1,0}") == 8 * 128 * 4
+    assert _shape_bytes("bf16[16,256]") == 16 * 256 * 2
+    assert _shape_bytes("pred[4]") == 4
+
+
+def test_parse_collectives():
+    out = parse_hlo_collectives(HLO)
+    pk = out["per_kind"]
+    # all-reduce (g=4): 2*(3/4)*8*128*4 = 6144
+    assert abs(pk["all-reduce"] - (6144 + 2 * 0.5 * 8 * 8 * 4)) < 1e-6
+    # all-gather (g=8): (7/8) * 16*256*2 = 7168
+    assert abs(pk["all-gather"] - 7168) < 1e-6
+    # reduce-scatter (g=4): (4-1)*result = 3*2*128*4 = 3072
+    assert abs(pk["reduce-scatter"] - 3072) < 1e-6
+    # collective-permute: full operand
+    assert abs(pk["collective-permute"] - 512) < 1e-6
+    # start/done pair counted once
+    assert out["num_ops"] == 6
+
+
+def test_roofline_terms():
+    t = roofline_terms(197e12, 819e9, 200e9,
+                       model_flops_per_device=98.5e12)
+    assert abs(t["compute_s"] - 1.0) < 1e-9
+    assert abs(t["memory_s"] - 1.0) < 1e-9
+    assert abs(t["collective_s"] - 1.0) < 1e-9
+    assert abs(t["useful_flop_ratio"] - 0.5) < 1e-9
+    t2 = roofline_terms(1e12, 819e9 * 10, 0)
+    assert t2["dominant"] == "memory"

