@@ -17,6 +17,7 @@ SECTIONS = [
     "fig12_pipelining",
     "fig13_overlap",
     "launch_reduction",
+    "serving_load",
     "roofline_table",
     "perf_log",
 ]

@@ -39,5 +39,9 @@ dt = time.time() - t0
 print(f"served {len(engine.finished)} requests / {toks} tokens in "
       f"{engine.iterations} iterations ({toks / dt:.1f} tok/s)")
 print(f"kv pages used at peak <= {engine.kv.total_pages}")
+summary = engine.metrics_summary()
+print(f"ttft mean {summary['ttft_mean_s']*1e3:.1f}ms  "
+      f"p95 {summary['ttft_p95_s']*1e3:.1f}ms  "
+      f"preemptions {int(summary['preemptions'])}")
 for r in sorted(engine.finished, key=lambda r: r.request_id)[:4]:
     print(f"  req {r.request_id}: {r.output}")

@@ -1,5 +1,8 @@
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# the dry-run compiles against 512 *host* devices; never let jax autodetect
+# a real accelerator (a stray libtpu would hijack backend init and crash)
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
 
 """Multi-pod dry-run: lower + compile every (architecture × input shape)
 cell on the production mesh, and extract the roofline terms from the
@@ -85,6 +88,8 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
 
     def costs_of(c):
         cost = c.cost_analysis()
+        if isinstance(cost, (list, tuple)):  # older jax: one dict per device
+            cost = cost[0] if cost else {}
         coll = parse_hlo_collectives(c.as_text())
         return (float(cost.get("flops", 0.0)),
                 float(cost.get("bytes accessed", 0.0)),

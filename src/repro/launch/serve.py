@@ -1,54 +1,131 @@
 """Serving launcher: ``python -m repro.launch.serve --arch <id>-reduced``.
 
-Continuous-batching engine over the decode path: admits a stream of
-requests, runs batched serve_steps (per-batch-bucket jit specialization —
-the paper's per-batch-size tGraph cache), reports per-token latency and
-throughput.  ``--megakernel`` runs the same requests through the Pallas
+Continuous-batching engine over the decode path: chunked prefill
+(``--chunk`` prompt tokens per iteration, ``--prefill-mode token`` for
+the legacy one-token baseline), page-pressure preemption
+(``--total-pages`` oversubscribes the KV page pool), and per-request
+latency metrics (TTFT / TPOT / queue time) over a Poisson-arrival
+workload (``--arrival-rate`` req/s; 0 = all requests arrive at t=0).
+``--megakernel`` additionally runs a decode batch through the Pallas
 persistent megakernel (interpret mode on CPU) and cross-checks logits.
 """
 from __future__ import annotations
 
 import argparse
 import time
+from typing import List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 
+def poisson_workload(rng: np.random.Generator, n_requests: int,
+                     prompt_len: int, max_new: int, vocab: int,
+                     arrival_rate: float) -> List["Request"]:
+    """Requests with exponential inter-arrival gaps (a Poisson process);
+    ``arrival_rate <= 0`` degenerates to an offline batch at t=0."""
+    from repro.runtime import Request
+
+    t = 0.0
+    reqs = []
+    for rid in range(n_requests):
+        if arrival_rate > 0:
+            t += float(rng.exponential(1.0 / arrival_rate))
+        prompt = rng.integers(1, vocab, size=prompt_len).tolist()
+        reqs.append(Request(rid, prompt, max_new_tokens=max_new,
+                            arrival_time=t))
+    return reqs
+
+
+def run_engine(cfg, params, reqs, *, slots: int, max_seq: int,
+               chunk: int, prefill_mode: str, page_size: int = 32,
+               total_pages: Optional[int] = None,
+               token_budget: Optional[int] = None,
+               step_cache=None):
+    from repro.runtime import ServingEngine
+
+    engine = ServingEngine(cfg, params, max_slots=slots, max_seq=max_seq,
+                           chunk=chunk, prefill_mode=prefill_mode,
+                           page_size=page_size, total_pages=total_pages,
+                           token_budget=token_budget,
+                           step_cache=step_cache)
+    for r in reqs:
+        engine.submit(r)
+    engine.run()
+    return engine
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="deepseek-7b-reduced")
     ap.add_argument("--requests", type=int, default=8)
-    ap.add_argument("--prompt-len", type=int, default=8)
+    ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--max-new", type=int, default=12)
     ap.add_argument("--slots", type=int, default=4)
-    ap.add_argument("--max-seq", type=int, default=64)
+    ap.add_argument("--max-seq", type=int, default=128)
+    ap.add_argument("--chunk", type=int, default=16)
+    ap.add_argument("--prefill-mode", choices=["chunked", "token"],
+                    default="chunked")
+    ap.add_argument("--token-budget", type=int, default=None)
+    ap.add_argument("--page-size", type=int, default=32,
+                    help="KV page granularity (must divide --max-seq)")
+    ap.add_argument("--total-pages", type=int, default=None,
+                    help="oversubscribe the KV page pool (forces "
+                         "preemption under load)")
+    ap.add_argument("--arrival-rate", type=float, default=0.0,
+                    help="Poisson arrival rate in req/s (0 = offline)")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--warmup", action="store_true",
+                    help="pre-compile all jit step widths on a throwaway "
+                         "engine so the reported TTFT/TPOT measure the "
+                         "schedule, not XLA compile time")
     ap.add_argument("--megakernel", action="store_true")
     args = ap.parse_args()
 
     from repro.configs import get_config
     from repro.models import init_params
-    from repro.runtime import Request, ServingEngine
 
     cfg = get_config(args.arch)
     assert not cfg.embed_input, "serve demo uses token-input archs"
     params = init_params(cfg, jax.random.PRNGKey(0), dtype=jnp.float32)
-    rng = np.random.default_rng(0)
+    rng = np.random.default_rng(args.seed)
 
-    engine = ServingEngine(cfg, params, max_slots=args.slots,
-                           max_seq=args.max_seq)
-    for rid in range(args.requests):
-        prompt = rng.integers(1, cfg.vocab, size=args.prompt_len).tolist()
-        engine.submit(Request(rid, prompt, max_new_tokens=args.max_new))
-
+    reqs = poisson_workload(rng, args.requests, args.prompt_len,
+                            args.max_new, cfg.vocab, args.arrival_rate)
+    step_cache: dict = {}
+    if args.warmup:
+        warm = poisson_workload(np.random.default_rng(args.seed),
+                                args.requests, args.prompt_len,
+                                args.max_new, cfg.vocab, args.arrival_rate)
+        run_engine(cfg, params, warm, slots=args.slots,
+                   max_seq=args.max_seq, chunk=args.chunk,
+                   prefill_mode=args.prefill_mode,
+                   page_size=args.page_size,
+                   total_pages=args.total_pages,
+                   token_budget=args.token_budget, step_cache=step_cache)
     t0 = time.time()
-    done = engine.run()
+    engine = run_engine(cfg, params, reqs, slots=args.slots,
+                        max_seq=args.max_seq, chunk=args.chunk,
+                        prefill_mode=args.prefill_mode,
+                        page_size=args.page_size,
+                        total_pages=args.total_pages,
+                        token_budget=args.token_budget,
+                        step_cache=step_cache)
     dt = time.time() - t0
+    done = engine.finished
     tokens = sum(len(r.output) for r in done)
     print(f"[serve] {len(done)} requests, {tokens} tokens, "
           f"{engine.iterations} iterations in {dt:.1f}s "
-          f"({tokens / max(dt, 1e-9):.1f} tok/s)")
+          f"({tokens / max(dt, 1e-9):.1f} tok/s, "
+          f"prefill={args.prefill_mode} chunk={engine.chunk})")
+    summary = engine.metrics_summary()
+    for key in ("ttft", "queue", "tpot"):
+        if f"{key}_mean_s" in summary:
+            print(f"[serve] {key}: mean {summary[f'{key}_mean_s']*1e3:.1f}ms"
+                  f"  p50 {summary[f'{key}_p50_s']*1e3:.1f}ms"
+                  f"  p95 {summary[f'{key}_p95_s']*1e3:.1f}ms")
+    print(f"[serve] preemptions: {int(summary['preemptions'])}")
     for r in done[:3]:
         print(f"  req {r.request_id}: {r.output[:8]}...")
 

@@ -4,6 +4,7 @@ from .lm import (
     forward,
     train_loss,
     prefill_step,
+    prefill_chunk,
     serve_step,
 )
 
@@ -13,5 +14,6 @@ __all__ = [
     "forward",
     "train_loss",
     "prefill_step",
+    "prefill_chunk",
     "serve_step",
 ]

@@ -20,6 +20,7 @@ __all__ = [
     "apply_rope",
     "blockwise_attention",
     "decode_attention",
+    "chunk_attention",
     "glu",
 ]
 
@@ -198,3 +199,44 @@ def decode_attention(
     out = jnp.einsum("bkgs,bskd->bkgd", p / jnp.maximum(l, 1e-30),
                      v_cache.astype(jnp.float32))
     return out.reshape(b, h, hd).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Chunk attention (N new tokens against a KV cache — chunked prefill).
+# ---------------------------------------------------------------------------
+
+
+def chunk_attention(
+    q: jax.Array,          # (B, N, H, hd) — the chunk's queries
+    k_cache: jax.Array,    # (B, S, KV, hd) — cache incl. the chunk's K
+    v_cache: jax.Array,    # (B, S, KV, hd)
+    seq_lens: jax.Array,   # (B,) int32: live length *before* the chunk
+    *,
+    scale: Optional[float] = None,
+) -> jax.Array:
+    """Masked softmax attention of N chunk queries over the cache.
+
+    Chunk position ``i`` of request ``b`` sits at absolute position
+    ``seq_lens[b] + i`` and may attend to cache entries ``< seq_lens[b]
+    + i + 1`` — history plus the causal prefix of its own chunk (whose
+    K/V have already been written into the cache).  For ``N == 1`` this
+    is exactly ``decode_attention``; the same exact (non-online) softmax
+    keeps chunked prefill numerically aligned with token-by-token decode.
+    """
+    b, n, h, hd = q.shape
+    kvh = k_cache.shape[2]
+    g = h // kvh
+    scale = scale if scale is not None else 1.0 / math.sqrt(hd)
+    qg = q.reshape(b, n, kvh, g, hd).astype(jnp.float32) * scale
+    logits = jnp.einsum("bnkgd,bskd->bnkgs", qg,
+                        k_cache.astype(jnp.float32))
+    # (B, N, S): key position < seq_lens[b] + i + 1
+    lim = seq_lens[:, None] + jnp.arange(n)[None, :] + 1
+    mask = jnp.arange(k_cache.shape[1])[None, None, :] < lim[:, :, None]
+    logits = jnp.where(mask[:, :, None, None, :], logits, -jnp.inf)
+    m = jnp.max(logits, axis=-1, keepdims=True)
+    p = jnp.exp(logits - m)
+    l = jnp.sum(p, axis=-1, keepdims=True)
+    out = jnp.einsum("bnkgs,bskd->bnkgd", p / jnp.maximum(l, 1e-30),
+                     v_cache.astype(jnp.float32))
+    return out.reshape(b, n, h, hd).astype(q.dtype)

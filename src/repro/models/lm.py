@@ -21,14 +21,14 @@ from typing import Any, Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from .layers import (apply_rope, blockwise_attention, decode_attention,
+from .layers import (apply_rope, blockwise_attention, chunk_attention,
                      rmsnorm, rope)
 from .moe import moe_ffn
 from .ssm import ssm_decode, ssm_prefill
 
 __all__ = [
     "block_structure", "init_params", "init_cache", "forward",
-    "train_loss", "prefill_step", "serve_step",
+    "train_loss", "prefill_step", "prefill_chunk", "serve_step",
 ]
 
 
@@ -204,39 +204,78 @@ def _attn_seq(h, p, cfg, cos, sin, policy, unroll=False):
     return h + (policy.act(o, "resid") if policy else o)
 
 
-def _attn_decode(h, p, cache_k, cache_v, cfg, cos, sin, seq_lens, policy):
-    """Attention sub-layer for one token.  h (B, D)."""
-    b, d = h.shape
+def _attn_chunk(h, p, cache_k, cache_v, cfg, cos, sin, seq_lens, valid,
+                policy):
+    """Attention sub-layer for an N-token chunk.  h (B, N, D).
+
+    The chunk's K/V are scattered into the cache at absolute positions
+    ``seq_lens[b] + i`` (padding positions — ``valid[b, i]`` False — are
+    routed out of bounds and dropped), then every chunk query attends over
+    the cache exactly as the decode path does.
+    """
+    b, n, d = h.shape
     x = rmsnorm(h, p["ln"], cfg.norm_eps, cfg.gemma_norm)
     q = x @ p["wq"]
     k = x @ p["wk"]
     v = x @ p["wv"]
     if cfg.qkv_bias:
         q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
-    q = q.reshape(b, cfg.n_heads, cfg.hd)
-    k = k.reshape(b, cfg.n_kv_heads, cfg.hd)
-    v = v.reshape(b, cfg.n_kv_heads, cfg.hd)
+    q = q.reshape(b, n, cfg.n_heads, cfg.hd)
+    k = k.reshape(b, n, cfg.n_kv_heads, cfg.hd)
+    v = v.reshape(b, n, cfg.n_kv_heads, cfg.hd)
     q, k = apply_rope(q, cos, sin), apply_rope(k, cos, sin)
-    # write the new token's K/V at per-request position seq_lens[b]
+    max_seq = cache_k.shape[1]
+    pos = seq_lens[:, None] + jnp.arange(n)[None, :]
+    pos = jnp.where(valid, pos, max_seq)  # OOB -> dropped by the scatter
     if policy is not None and policy.masked_cache_update:
-        # masked rewrite: elementwise on the cache, so a sequence-sharded
-        # cache updates shard-locally (no all-gather around the scatter)
-        hit = (jnp.arange(cache_k.shape[1])[None, :]
-               == seq_lens[:, None])[:, :, None, None]
-        cache_k = jnp.where(hit, k.astype(cache_k.dtype)[:, None],
-                            cache_k)
-        cache_v = jnp.where(hit, v.astype(cache_v.dtype)[:, None],
-                            cache_v)
+        # masked rewrite (same invariant as _attn_decode): elementwise on
+        # the cache so a sequence-sharded cache updates shard-locally
+        hit = ((jnp.arange(max_seq)[None, None, :] == pos[:, :, None])
+               & valid[:, :, None])                      # (B, N, S)
+        onehot = hit.astype(jnp.float32)
+        knew = jnp.einsum("bns,bnkd->bskd", onehot,
+                          k.astype(jnp.float32)).astype(cache_k.dtype)
+        vnew = jnp.einsum("bns,bnkd->bskd", onehot,
+                          v.astype(jnp.float32)).astype(cache_v.dtype)
+        any_hit = jnp.any(hit, axis=1)[:, :, None, None]  # (B, S, 1, 1)
+        cache_k = jnp.where(any_hit, knew, cache_k)
+        cache_v = jnp.where(any_hit, vnew, cache_v)
     else:
-        bidx = jnp.arange(b)
-        cache_k = cache_k.at[bidx, seq_lens].set(k.astype(cache_k.dtype))
-        cache_v = cache_v.at[bidx, seq_lens].set(v.astype(cache_v.dtype))
+        bidx = jnp.arange(b)[:, None]
+        cache_k = cache_k.at[bidx, pos].set(k.astype(cache_k.dtype),
+                                            mode="drop")
+        cache_v = cache_v.at[bidx, pos].set(v.astype(cache_v.dtype),
+                                            mode="drop")
     if policy:
         cache_k = policy.act(cache_k, "kv_cache")
         cache_v = policy.act(cache_v, "kv_cache")
-    o = decode_attention(q, cache_k, cache_v, seq_lens + 1)
-    o = o.reshape(b, cfg.n_heads * cfg.hd) @ p["wo"]
+    o = chunk_attention(q, cache_k, cache_v, seq_lens)
+    o = o.reshape(b, n, cfg.n_heads * cfg.hd) @ p["wo"]
     return h + o, cache_k, cache_v
+
+
+def _ssm_chunk(h, p, states, cfg, valid):
+    """Mamba2 sub-layer for an N-token chunk: step ``ssm_decode`` over the
+    chunk positions, freezing conv/SSD states at padding positions so a
+    short chunk leaves the request's state exactly where token-by-token
+    decode would.  h (B, N, D) *already normed*; returns y (B, N, D)."""
+
+    def tok(st, inp):
+        x_t, v_t = inp  # (B, D), (B,)
+        y, new_st = ssm_decode(x_t, st, p, cfg)
+        merged = {
+            k: jnp.where(v_t.reshape((-1,) + (1,) * (new_st[k].ndim - 1)),
+                         new_st[k], st[k])
+            for k in st
+        }
+        return merged, y
+
+    if h.shape[1] == 1:  # decode: no scan machinery around a single step
+        states, y = tok(states, (h[:, 0], valid[:, 0]))
+        return y[:, None], states
+    states, ys = jax.lax.scan(
+        tok, states, (h.swapaxes(0, 1), valid.swapaxes(0, 1)))
+    return ys.swapaxes(0, 1), states
 
 
 def _ffn(h, kind, p, cfg, policy, mesh):
@@ -356,24 +395,61 @@ def prefill_step(params, cfg, tokens_or_embeds, positions, *, policy=None,
 
 def serve_step(params, cfg, cache, tokens_or_embeds, seq_lens, *,
                policy=None, mesh=None, unroll: bool = False):
-    """One decode step.
+    """One decode step — exactly ``prefill_chunk`` with a width-1 chunk.
 
     tokens (B,) int32 or embeds (B, D); seq_lens (B,) int32 = live length
     *before* this token (the new token is written at index seq_lens).
     Returns (logits (B, V) float32, new_cache).
+    """
+    if cfg.embed_input:
+        chunk_in = tokens_or_embeds[:, None, :]
+    else:
+        chunk_in = tokens_or_embeds[:, None]
+    logits, new_cache = prefill_chunk(params, cfg, cache, chunk_in,
+                                      seq_lens, policy=policy, mesh=mesh,
+                                      unroll=unroll)
+    return logits[:, 0], new_cache
+
+
+# ---------------------------------------------------------------------------
+# Chunked prefill: N new tokens per request through the decode cache.
+# ---------------------------------------------------------------------------
+
+
+def prefill_chunk(params, cfg, cache, tokens_or_embeds, seq_lens,
+                  chunk_lens=None, *, policy=None, mesh=None,
+                  unroll: bool = False):
+    """Consume N prompt tokens per request in ONE step (paper §6.1's
+    chunked prefill), writing K/V and SSM states through the exact same
+    cache machinery as ``serve_step``.
+
+    tokens (B, N) int32 or embeds (B, N, D); seq_lens (B,) int32 = live
+    length *before* the chunk (token i lands at position seq_lens + i);
+    chunk_lens (B,) int32 = valid tokens per request (default N).
+    Positions >= chunk_lens are padding: they write no cache state and
+    their logits are garbage — callers read logits at ``chunk_lens - 1``.
+    Returns (logits (B, N, V) float32, new_cache).
+
+    ``serve_step`` IS the N == 1 case of this function, so an engine can
+    mix decode slots (chunk_len 1) and prefill slots (chunk_len up to N)
+    in one batch without changing any request's sampled stream.
     """
     st = block_structure(cfg)
     if cfg.embed_input:
         h = tokens_or_embeds
     else:
         h = params["embed"][tokens_or_embeds]
+    b, n = h.shape[:2]
+    if chunk_lens is None:
+        chunk_lens = jnp.full((b,), n, jnp.int32)
+    valid = jnp.arange(n)[None, :] < chunk_lens[:, None]  # (B, N)
     if cfg.gemma_norm:
         h = (h.astype(jnp.float32) * math.sqrt(cfg.d_model)).astype(h.dtype)
     cos = sin = None
     if st["attn_pos"]:
-        pos = seq_lens
+        pos = seq_lens[:, None] + jnp.arange(n)[None, :]
         if cfg.mrope_sections is not None:
-            pos = jnp.stack([seq_lens] * 3, axis=-1)  # text-mode M-RoPE
+            pos = jnp.stack([pos] * 3, axis=-1)  # text-mode M-RoPE
         cos, sin = rope(pos, cfg.hd, cfg.rope_theta, cfg.mrope_sections)
 
     def block_fn(h, xs):
@@ -382,9 +458,10 @@ def serve_step(params, cfg, cache, tokens_or_embeds, seq_lens, *,
         ai = si = mi = ei = 0
         for pos_i in range(st["period"]):
             if cfg.layer_kind(pos_i) == "attn":
-                h, ck, cv = _attn_decode(
+                h, ck, cv = _attn_chunk(
                     h, _take(bp["attn"], ai), blk_cache["k"][ai],
-                    blk_cache["v"][ai], cfg, cos, sin, seq_lens, policy)
+                    blk_cache["v"][ai], cfg, cos, sin, seq_lens, valid,
+                    policy)
                 new_cache["k"] = new_cache["k"].at[ai].set(ck)
                 new_cache["v"] = new_cache["v"].at[ai].set(cv)
                 ai += 1
@@ -393,7 +470,7 @@ def serve_step(params, cfg, cache, tokens_or_embeds, seq_lens, *,
                 x = rmsnorm(h, p["ln"], cfg.norm_eps, cfg.gemma_norm)
                 states = {k: blk_cache[k][si]
                           for k in ("conv_x", "conv_b", "conv_c", "ssm")}
-                y, new_states = ssm_decode(x, states, p, cfg)
+                y, new_states = _ssm_chunk(x, p, states, cfg, valid)
                 h = h + y
                 for k, v in new_states.items():
                     new_cache[k] = new_cache[k].at[si].set(v)

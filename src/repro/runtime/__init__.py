@@ -1,4 +1,4 @@
 from .kv_cache import PagedKVCache
-from .engine import ServingEngine, Request
+from .engine import ServingEngine, Request, RequestMetrics
 
-__all__ = ["PagedKVCache", "ServingEngine", "Request"]
+__all__ = ["PagedKVCache", "ServingEngine", "Request", "RequestMetrics"]

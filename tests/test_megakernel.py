@@ -27,8 +27,19 @@ FAMILIES = [
 ]
 
 
+def test_megakernel_matches_oracle_smoke():
+    """Fast-lane megakernel numerics: one dense layer end to end (the
+    full per-family sweep below is slow-marked)."""
+    _check_megakernel_matches_oracle("deepseek-7b", 1)
+
+
+@pytest.mark.slow
 @pytest.mark.parametrize("arch,layers", FAMILIES)
 def test_megakernel_matches_oracle(arch, layers):
+    _check_megakernel_matches_oracle(arch, layers)
+
+
+def _check_megakernel_matches_oracle(arch, layers):
     cfg = dataclasses.replace(get_config(arch).reduced(), n_layers=layers)
     params = jax.tree.map(np.asarray, init_params(cfg, KEY,
                                                   dtype=jnp.float32))

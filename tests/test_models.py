@@ -51,18 +51,14 @@ def test_forward_decode_loss(arch):
     assert np.isfinite(float(loss))
 
 
-@pytest.mark.parametrize("arch", [
-    "deepseek-7b", "gemma-7b", "qwen2-vl-2b", "mamba2-2.7b",
-    "jamba-1.5-large-398b", "granite-moe-1b-a400m",
-])
-def test_decode_matches_forward(arch):
+def _check_decode_matches_forward(arch, s=10):
     """Sequential decode must reproduce the parallel forward exactly
     (MoE: with a dropless capacity factor)."""
     cfg = get_config(arch).reduced()
     if cfg.n_experts:
         cfg = dataclasses.replace(cfg, capacity_factor=float(cfg.n_experts))
     params = init_params(cfg, KEY, dtype=jnp.float32)
-    b, s = 2, 10
+    b = 2
     inp, pos = _inputs(cfg, b, s)
     ref = np.asarray(forward(params, cfg, inp, pos))
     cache = init_cache(cfg, b, s, dtype=jnp.float32)
@@ -72,6 +68,21 @@ def test_decode_matches_forward(arch):
                                jnp.full((b,), t, jnp.int32))
         np.testing.assert_allclose(np.asarray(lg), ref[:, t],
                                    rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("arch", [
+    "deepseek-7b", "gemma-7b", "qwen2-vl-2b", "mamba2-2.7b",
+    "jamba-1.5-large-398b", "granite-moe-1b-a400m",
+])
+def test_decode_matches_forward(arch):
+    _check_decode_matches_forward(arch)
+
+
+def test_decode_matches_forward_smoke():
+    """Fast lane keeps one decode-vs-forward consistency check per run
+    (full per-family sweep is slow-marked)."""
+    _check_decode_matches_forward("deepseek-7b", s=6)
 
 
 def test_unrolled_forward_matches_scan():

@@ -60,7 +60,25 @@ def test_slot_reuse_after_release():
     assert s0 == s1
 
 
-def test_engine_batch_bucketing():
+def test_engine_step_cache_keyed_by_cfg_and_width():
+    """Jitted steps specialize on (config, chunk width) — a shared cache
+    can never hand one model's compiled step to another engine."""
     cfg, params = _make()
-    eng = ServingEngine(cfg, params, max_slots=4, max_seq=32)
-    assert eng._bucket(1) == 1 and eng._bucket(3) == 4 and eng._bucket(4) == 4
+    shared = {}
+    eng = ServingEngine(cfg, params, max_slots=2, max_seq=32,
+                        step_cache=shared)
+    f1, f2, f1b = eng._step_fn(1), eng._step_fn(2), eng._step_fn(1)
+    assert f1 is f1b and f1 is not f2
+    assert set(shared) == {(cfg, 1), (cfg, 2)}
+    cfg2, params2 = _make("gemma-7b")
+    eng2 = ServingEngine(cfg2, params2, max_slots=2, max_seq=32,
+                         step_cache=shared)
+    assert eng2._step_fn(1) is not f1
+
+
+def test_submit_rejects_oversized_request():
+    cfg, params = _make()
+    eng = ServingEngine(cfg, params, max_slots=1, max_seq=16,
+                        page_size=16)
+    with np.testing.assert_raises(ValueError):
+        eng.submit(Request(0, list(range(1, 13)), max_new_tokens=8))

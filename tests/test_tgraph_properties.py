@@ -13,7 +13,11 @@ The system invariants, each checked on randomized operator graphs:
 """
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="property tests need the optional hypothesis dep "
+    "(pip install '.[test]')")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core.compile import CompileOptions, megakernelize
 from repro.core.decompose import DecomposeConfig
