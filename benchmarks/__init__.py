@@ -1,0 +1,2 @@
+"""Benchmark suite (installable so the ``mpk-bench`` console script can
+drive it; also runnable as ``python -m benchmarks.run`` from the repo)."""

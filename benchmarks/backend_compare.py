@@ -1,0 +1,67 @@
+"""Backend comparison: per-step decode latency, jax vs interpreter vs
+megakernel, through the one Program API.
+
+Each backend compiles once (``mpk.compile`` + ``bind``), then runs a
+warmed N-step decode loop; ``us_per_call`` is mean per-step wall time and
+``derived`` carries compile/bind time, the parity error against the jax
+oracle, and the megakernel's compile-once counters.  This is the CSV the
+nightly CI job uploads (backend_compare.csv).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import api
+from repro.models import init_params
+
+from .common import emit, get_config
+
+ARCHS = ["deepseek-7b", "granite-moe-1b-a400m", "mamba2-2.7b"]
+B, S = 2, 32
+N_STEPS = 8
+N_WARMUP = 2
+
+
+def main() -> None:
+    print("# Program backends: per-decode-step latency (reduced configs)")
+    for arch in ARCHS:
+        cfg = get_config(arch).reduced()
+        params = init_params(cfg, jax.random.PRNGKey(0), jnp.float32)
+        rng = np.random.default_rng(0)
+        toks = rng.integers(1, cfg.vocab,
+                            size=(N_WARMUP + N_STEPS, B)).astype(np.int32)
+        ref = None
+        for bk in api.BACKENDS:
+            t0 = time.time()
+            prog = api.compile(cfg, B, S, backend=bk).bind(params)
+            prog.init_state()
+            compile_s = time.time() - t0
+            lens = np.zeros((B,), np.int32)
+            for i in range(N_WARMUP):      # jit/trace excluded from timing
+                out = prog.step(toks[i], lens)
+                lens += 1
+            t0 = time.time()
+            for i in range(N_WARMUP, N_WARMUP + N_STEPS):
+                out = prog.step(toks[i], lens)
+                lens += 1
+            dt = (time.time() - t0) / N_STEPS
+            if bk == "jax":
+                ref = out
+                err = 0.0
+            else:
+                err = float(np.abs(out - ref).max())
+            extra = ""
+            if bk == "megakernel":
+                extra = (f";traces={prog.trace_count}"
+                         f";uploads={prog.upload_count}")
+            emit(f"backend/{arch}/{bk}", dt * 1e6,
+                 f"compile_s={compile_s:.2f};final_step_err={err:.1e}"
+                 f"{extra}")
+
+
+if __name__ == "__main__":
+    main()

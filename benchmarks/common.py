@@ -3,15 +3,12 @@ from __future__ import annotations
 
 import functools
 import sys
-import time
 from pathlib import Path
 
 sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
 
+from repro import api  # noqa: E402
 from repro.configs import get_config  # noqa: E402
-from repro.core.compile import CompileOptions, megakernelize  # noqa: E402
-from repro.core.decompose import DecomposeConfig  # noqa: E402
-from repro.core.lowering import build_decode_graph  # noqa: E402
 
 RUNS = Path(__file__).resolve().parent.parent / "runs"
 
@@ -20,16 +17,12 @@ RUNS = Path(__file__).resolve().parent.parent / "runs"
 def compiled_decode(arch: str, batch: int = 1, seq: int = 2048,
                     tp: int = 1, latency_aware: bool = True,
                     fusion: bool = True):
+    """A compiled decode tGraph via the Program API (interpreter backend —
+    compiler artifacts only, no execution)."""
     cfg = get_config(arch)
-    g = build_decode_graph(cfg, batch, seq, tp=tp)
-    opts = CompileOptions(
-        decompose=DecomposeConfig(),
-        latency_aware_schedule=latency_aware,
-        event_fusion=fusion)
-    t0 = time.time()
-    out = megakernelize(g, opts)
-    out.stats["compile_wall_s"] = time.time() - t0
-    return out
+    prog = api.compile(cfg, batch, seq, backend="interpreter", tp=tp,
+                       latency_aware=latency_aware, event_fusion=fusion)
+    return prog.compiled  # stats["compile_wall_s"] set by the Program
 
 
 def emit(name: str, us_per_call: float, derived: str = "") -> None:

@@ -10,6 +10,7 @@ import traceback
 
 
 SECTIONS = [
+    "backend_compare",
     "table2_compiler_stats",
     "fig9_decode_latency",
     "fig10_moe",

@@ -1,59 +1,58 @@
-"""Quickstart: mega-kernelize a model's decode step in ~20 lines.
+"""Quickstart: compile once, decode many — the ``mpk.Program`` API.
 
-    PYTHONPATH=src python examples/quickstart.py
+    pip install -e .          # (or: PYTHONPATH=src python examples/quickstart.py)
+    python examples/quickstart.py
 
-1. pick an architecture config,
-2. lower its decode step to an operator graph,
-3. run the MPK compiler (decompose → deps → fuse → normalize → linearize),
-4. execute the compiled tGraph — then the REAL single-pallas_call
-   megakernel — and check both against the JAX model.
+One ``mpk.compile`` call lowers a model's decode step through the MPK
+compiler (decompose → deps → fuse → normalize → linearize) and returns a
+stateful Program; the three backends are interchangeable:
+
+* ``jax``         — the model oracle,
+* ``interpreter`` — the numpy tGraph interpreter,
+* ``megakernel``  — ONE persistent pallas_call per step against a
+  device-resident heap (weights uploaded once at ``bind``).
 """
-import pathlib
-import sys
-
-sys.path.insert(0, str(pathlib.Path(__file__).parent.parent / "src"))
-
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+try:
+    import mpk
+except ImportError:  # bare checkout without `pip install -e .`
+    import pathlib
+    import sys
+    sys.path.insert(0, str(pathlib.Path(__file__).parent.parent / "src"))
+    import mpk
 from repro.configs import get_config
-from repro.core.compile import megakernelize
-from repro.core.lowering import build_decode_graph, decode_bindings
-from repro.core.interpreter import execute_tgraph
-from repro.kernels.megakernel import run_megakernel
-from repro.kernels.megakernel.ops import compile_decode_megakernel
-from repro.models import init_cache, init_params, serve_step
+from repro.models import init_params
 
 cfg = get_config("deepseek-7b").reduced()          # any of the 10 archs
 B, S = 2, 16
+params = init_params(cfg, jax.random.PRNGKey(0), jnp.float32)
 
-# ---- compile: decode step -> SM-level tGraph (paper §4) ----
-graph = build_decode_graph(cfg, B, S)
-compiled = megakernelize(graph)
-s = compiled.stats
-print(f"ops={len(graph.ops)}  tasks={compiled.tg.num_tasks()}  "
-      f"events={s['events_post_fusion']}  fusion={s['fusion_reduction']:.1f}x  "
+# ---- compile once per backend: decode step -> Program (paper §4) ----
+progs = {bk: mpk.compile(cfg, B, S, backend=bk).bind(params).init_state()
+         for bk in mpk.BACKENDS}
+s = progs["megakernel"].stats
+print(f"tasks={progs['megakernel'].describe()['tasks']}  "
+      f"events={s['events_post_fusion']}  "
+      f"fusion={s['fusion_reduction']:.1f}x  "
+      f"workspace-reuse={s['workspace_reuse_x']:.2f}x  "
       f"comm-overlap={s['overlapped_frac']:.0%}")
 
-# ---- execute ----
-params = jax.tree.map(np.asarray,
-                      init_params(cfg, jax.random.PRNGKey(0), jnp.float32))
-cache = jax.tree.map(np.asarray, init_cache(cfg, B, S, dtype=jnp.float32))
-tokens = np.array([5, 9])
-lens = np.array([0, 3], np.int32)
+# ---- step many: an 8-token greedy decode, state resident per backend ----
+rng = np.random.default_rng(0)
+lens = np.zeros((B,), np.int32)
+toks = rng.integers(1, cfg.vocab, size=B).astype(np.int32)
+for i in range(8):
+    outs = {bk: p.step(toks, lens) for bk, p in progs.items()}
+    for bk in ("interpreter", "megakernel"):
+        err = float(np.abs(outs[bk] - outs["jax"]).max())
+        assert err < 3e-4, (bk, i, err)
+    toks = outs["jax"].argmax(axis=-1).astype(np.int32)
+    lens += 1
 
-binds = decode_bindings(cfg, params, cache, tokens, lens)
-tg_out = execute_tgraph(compiled, binds)           # numpy oracle
-
-prog = compile_decode_megakernel(cfg, B, S)        # ONE pallas_call
-mk_out = run_megakernel(prog, cfg, params, cache, tokens, lens)
-
-jax_logits, _ = serve_step(jax.tree.map(jnp.asarray, params), cfg,
-                           jax.tree.map(jnp.asarray, cache),
-                           jnp.asarray(tokens), jnp.asarray(lens))
-print("tgraph vs jax:    ",
-      float(np.abs(tg_out["logits"] - np.asarray(jax_logits)).max()))
-print("megakernel vs jax:",
-      float(np.abs(mk_out["logits"] - np.asarray(jax_logits)).max()))
-print(f"megakernel: {len(prog.compiled.order)} tasks in 1 kernel launch")
+mk = progs["megakernel"]
+print(f"8 decode steps, all backends agree; megakernel: "
+      f"{len(mk.plan.compiled.order)} tasks/launch, "
+      f"{mk.trace_count} jit trace, {mk.upload_count} weight upload")

@@ -1,5 +1,7 @@
-"""Continuous-batching serving (paper §6.1): staggered request arrivals,
-paged KV slots, per-batch-bucket jit specialization.
+"""Continuous-batching serving (paper §6.1) over a compiled Program:
+staggered request arrivals, paged KV slots, chunk-width-keyed jit
+specialization — the engine is backend-agnostic (swap ``BACKEND`` for
+"interpreter" or "megakernel" and the streams stay identical).
 
     PYTHONPATH=src python examples/serve_continuous_batching.py
 """
@@ -13,13 +15,17 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+import mpk
 from repro.configs import get_config
 from repro.models import init_params
 from repro.runtime import Request, ServingEngine
 
+BACKEND = "jax"   # or "interpreter" / "megakernel"
+
 cfg = get_config("gemma-7b").reduced()
 params = init_params(cfg, jax.random.PRNGKey(0), dtype=jnp.float32)
-engine = ServingEngine(cfg, params, max_slots=4, max_seq=64)
+program = mpk.compile(cfg, batch=4, max_seq=64, backend=BACKEND).bind(params)
+engine = ServingEngine(program)
 
 rng = np.random.default_rng(0)
 arrivals = [(i, 3 * i) for i in range(8)]   # request i arrives at step 3i
@@ -37,7 +43,9 @@ while submitted < len(arrivals) or engine.running or engine.waiting:
 toks = sum(len(r.output) for r in engine.finished)
 dt = time.time() - t0
 print(f"served {len(engine.finished)} requests / {toks} tokens in "
-      f"{engine.iterations} iterations ({toks / dt:.1f} tok/s)")
+      f"{engine.iterations} iterations "
+      f"({engine.decode_iterations} pure-decode via {BACKEND}; "
+      f"{toks / dt:.1f} tok/s)")
 print(f"kv pages used at peak <= {engine.kv.total_pages}")
 summary = engine.metrics_summary()
 print(f"ttft mean {summary['ttft_mean_s']*1e3:.1f}ms  "

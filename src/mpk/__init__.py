@@ -1,0 +1,8 @@
+"""``mpk`` — alias for :mod:`repro.api`, the Program API.
+
+    import mpk
+    prog = mpk.compile(cfg, batch, max_seq, backend="megakernel")
+"""
+from repro.api import BACKENDS, Program, compile
+
+__all__ = ["BACKENDS", "Program", "compile"]

@@ -1,0 +1,12 @@
+"""``repro.api`` — the public compile-once / step-many Program API.
+
+Also importable as the ``mpk`` top-level alias package::
+
+    import mpk
+    prog = mpk.compile(cfg, batch=2, max_seq=16, backend="megakernel")
+    prog.bind(params).init_state()
+    logits = prog.step(tokens, seq_lens)
+"""
+from .program import BACKENDS, Program, compile
+
+__all__ = ["BACKENDS", "Program", "compile"]

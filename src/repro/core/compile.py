@@ -11,6 +11,7 @@ reproducing the paper's Table 2.
 """
 from __future__ import annotations
 
+import bisect
 import dataclasses
 from typing import Any, Dict, List, Optional, Tuple
 
@@ -157,24 +158,105 @@ def _add_start_final_events(tg: TGraph) -> None:
 
 
 def _pack_workspace(
-    g: ComputationGraph, align: int
+    g: ComputationGraph, align: int, lin: Optional[LinearizedTGraph] = None,
+    tg: Optional[TGraph] = None,
 ) -> Tuple[Dict[str, Tuple[int, int]], int]:
-    """Assign every non-input tensor an offset in one flat workspace buffer.
+    """Assign every non-input tensor an offset in one flat workspace buffer,
+    reusing slots via liveness: a tensor's slot is freed after the *last
+    task of its last consumer* in linearized order, so tensors with
+    disjoint live ranges share bytes.
 
-    A simple bump allocator is used (tensor lifetimes across a decode step are
-    nearly program-long because the Pallas pipeline may still be prefetching);
-    liveness-based reuse is a recorded future optimization.
+    This is the compiler's activation-memory plan (reported as
+    ``workspace_elements`` / ``workspace_reuse_x``); the interpret-mode
+    megakernel heap in ``kernels/megakernel/desc.py`` still lays tensors
+    out row-padded without reuse — wiring its ``_build_layout`` to these
+    offsets (valid: the grid executes in linearized order) is recorded
+    future work.
+
+    Live range of tensor ``t`` (in linearized task positions): from the
+    first task of its producer op to the last task of any consumer op
+    (graph outputs stay live forever).  Allocation is first-fit over an
+    address-ordered free list with coalescing; without ``lin`` (no
+    schedule yet) it degrades to the plain bump allocator.
     """
-    layout: Dict[str, Tuple[int, int]] = {}
-    off = 0
     inputs = set(g.inputs)
-    for name, spec in g.tensors.items():
-        if name in inputs:
-            continue
-        size = spec.size
-        layout[name] = (off, size)
-        off += (size + align - 1) // align * align
-    return layout, off
+    outputs = set(g.outputs)
+    names = [n for n in g.tensors if n not in inputs]
+
+    # ---- live ranges in linearized task positions ----
+    if lin is not None and tg is not None:
+        op_first: Dict[int, int] = {}
+        op_last: Dict[int, int] = {}
+        for pos, tid in enumerate(lin.order):
+            oid = tg.tasks[tid].op_id
+            if oid < 0:
+                continue
+            op_first.setdefault(oid, pos)
+            op_last[oid] = pos
+        infinity = len(lin.order) + 1
+
+        def live_range(name: str) -> Tuple[int, int]:
+            prod = g.producer.get(name)
+            start = op_first.get(prod, 0) if prod is not None else 0
+            if name in outputs:
+                return start, infinity
+            # the producer's own last task keeps the slot live: an
+            # interleaved schedule may finish every consumer before the
+            # producer's final tile lands
+            end = op_last.get(prod, start) if prod is not None else start
+            for cons in g.consumers.get(name, ()):
+                end = max(end, op_last.get(cons, start))
+            return start, end
+    else:
+        def live_range(name: str) -> Tuple[int, int]:
+            return 0, len(names) + 1
+
+    ranges = {n: live_range(n) for n in names}
+    aligned = lambda s: (s + align - 1) // align * align
+
+    # ---- first-fit free-list allocation in order of first use ----
+    layout: Dict[str, Tuple[int, int]] = {}
+    free: List[Tuple[int, int]] = []       # (offset, size), address-ordered
+    pending: List[Tuple[int, int, int]] = []  # (free_pos, offset, size)
+    top = 0
+
+    def release(off: int, size: int) -> None:
+        i = bisect.bisect_left(free, (off, size))
+        if i < len(free) and off + size == free[i][0]:  # merge right
+            size += free[i][1]
+            free.pop(i)
+        if i > 0 and free[i - 1][0] + free[i - 1][1] == off:  # merge left
+            off = free[i - 1][0]
+            size += free[i - 1][1]
+            free.pop(i - 1)
+            i -= 1
+        free.insert(i, (off, size))
+
+    for name in sorted(names, key=lambda n: (ranges[n][0], n)):
+        start, end = ranges[name]
+        still = []
+        for fp, off, size in pending:
+            if fp < start:
+                release(off, size)
+            else:
+                still.append((fp, off, size))
+        pending = still
+        size = aligned(g.tensors[name].size)
+        slot = None
+        for i, (off, fsize) in enumerate(free):
+            if fsize >= size:
+                slot = off
+                if fsize > size:
+                    free[i] = (off + size, fsize - size)
+                else:
+                    free.pop(i)
+                break
+        if slot is None:
+            slot = top
+            top += size
+        layout[name] = (slot, g.tensors[name].size)
+        pending.append((end, slot, size))
+    return layout, top
 
 
 def megakernelize(
@@ -199,12 +281,18 @@ def megakernelize(
     else:
         lin = linearize(tg)
 
-    layout, ws_size = _pack_workspace(g, opts.workspace_align)
+    layout, ws_size = _pack_workspace(g, opts.workspace_align, lin, tg)
 
     stats = dict(tg.stats)
     stats.pop("per_op_tasks", None)
     stats["pipeline_stalls"] = count_pipeline_stalls(lin)
     stats.update(overlap_statistics(lin))
     stats["workspace_elements"] = ws_size
+    # the bump-allocator footprint (no reuse), for the shrink report
+    bump = sum((g.tensors[n].size + opts.workspace_align - 1)
+               // opts.workspace_align * opts.workspace_align
+               for n in layout)
+    stats["workspace_elements_no_reuse"] = bump
+    stats["workspace_reuse_x"] = bump / max(ws_size, 1)
     compiled = CompiledTGraph(g, tg, lin, layout, ws_size, stats)
     return compiled

@@ -1,4 +1,6 @@
-from .desc import MegakernelProgram, lower_tgraph
-from .ops import run_megakernel
+from .desc import MegakernelPlan, MegakernelProgram, lower_tgraph
+from .ops import (MegakernelExecutor, compile_decode_megakernel,
+                  run_megakernel)
 
-__all__ = ["MegakernelProgram", "lower_tgraph", "run_megakernel"]
+__all__ = ["MegakernelPlan", "MegakernelProgram", "MegakernelExecutor",
+           "lower_tgraph", "compile_decode_megakernel", "run_megakernel"]

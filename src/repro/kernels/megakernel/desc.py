@@ -33,7 +33,12 @@ import numpy as np
 from ...core.compile import CompiledTGraph
 from ...core.graph import OpKind
 
-__all__ = ["KIND_CODES", "DESC_WORDS", "MegakernelProgram", "lower_tgraph"]
+__all__ = ["KIND_CODES", "DESC_WORDS", "PER_STEP_INPUTS", "MegakernelPlan",
+           "MegakernelProgram", "lower_tgraph"]
+
+#: graph inputs that change every decode step — everything else in the heap
+#: (weights, caches, SSM/conv state) is uploaded once and lives on device
+PER_STEP_INPUTS = ("tokens", "h0", "positions", "seq_lens", "live_lens")
 
 DESC_WORDS = 24
 
@@ -89,12 +94,37 @@ class TensorSlot:
 
 
 @dataclasses.dataclass
-class MegakernelProgram:
+class MegakernelPlan:
+    """The *static* half of a compiled megakernel: descriptor table, heap
+    layout and kernel statics.  Everything here is a pure function of
+    (graph, cfg) — no device state.  The live half (resident heap, jitted
+    step, incremental input binding) is ``ops.MegakernelExecutor``."""
+
     compiled: CompiledTGraph
     descs: np.ndarray                 # (num_tasks, DESC_WORDS) int32
     layout: Dict[str, TensorSlot]
     heap_size: int
     statics: Dict[str, Any]           # compile-time kernel parameters
+
+    # ---------------------------------------------------- input classes
+    def input_classes(self) -> Dict[str, List[str]]:
+        """Partition graph inputs into ``per_step`` (tokens/positions/
+        lengths — rewritten every step), ``state`` (KV cache, conv and SSM
+        state — in-place aliased, stays device-resident) and ``weights``
+        (uploaded exactly once at bind)."""
+        g = self.compiled.graph
+        state = set()
+        for op in g.ops:
+            amap = _ALIAS_OPS.get(op.kind)
+            if amap:
+                for in_i in amap.values():
+                    state.add(op.inputs[in_i])
+        per_step = [n for n in g.inputs if n in PER_STEP_INPUTS]
+        weights = [n for n in g.inputs
+                   if n not in state and n not in PER_STEP_INPUTS]
+        return {"per_step": per_step,
+                "state": [n for n in g.inputs if n in state],
+                "weights": weights}
 
     def build_heap(self, bindings: Dict[str, np.ndarray]) -> np.ndarray:
         heap = np.zeros((self.heap_size,), np.float32)
@@ -113,6 +143,11 @@ class MegakernelProgram:
         cols = slot.shape[-1]
         view = heap[slot.offset : slot.offset + slot.rows * slot.ld]
         return view.reshape(slot.rows, slot.ld)[:, :cols].reshape(slot.shape)
+
+
+#: deprecated name — the plan/executor split renamed the static half;
+#: ``ops.MegakernelExecutor`` is the live half
+MegakernelProgram = MegakernelPlan
 
 
 #: outputs that alias an input region (in-place state update)
@@ -156,7 +191,7 @@ def _build_layout(compiled: CompiledTGraph, tn: int
 
 
 def lower_tgraph(compiled: CompiledTGraph, cfg,
-                 tn: Optional[int] = None) -> MegakernelProgram:
+                 tn: Optional[int] = None) -> MegakernelPlan:
     g = compiled.graph
     tg = compiled.tg
 
@@ -362,4 +397,4 @@ def lower_tgraph(compiled: CompiledTGraph, cfg,
         if mask.any():
             k_max = max(k_max, int(descs[mask, 3].max(initial=1)))
     statics["TK"] = _align(max(statics["TK"], k_max))
-    return MegakernelProgram(compiled, descs, layout, heap_size, statics)
+    return MegakernelPlan(compiled, descs, layout, heap_size, statics)

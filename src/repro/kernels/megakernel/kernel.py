@@ -29,7 +29,16 @@ from jax.experimental.pallas import tpu as pltpu
 
 from .desc import DESC_WORDS
 
-__all__ = ["make_megakernel"]
+__all__ = ["make_megakernel", "make_count"]
+
+#: incremented on every ``make_megakernel`` call — the compile-count hook
+#: used by tests to assert the Program API builds the kernel exactly once
+#: across an N-step decode loop
+_MAKE_COUNT = 0
+
+
+def make_count() -> int:
+    return _MAKE_COUNT
 
 
 def _f32(bits):
@@ -46,6 +55,8 @@ def _act(y, act_id):
 
 def make_megakernel(statics: Dict[str, Any], num_tasks: int,
                     heap_size: int):
+    global _MAKE_COUNT
+    _MAKE_COUNT += 1
     TN = statics["TN"]
     TM = statics["TM"]
     TKC = min(128, max(8, statics["TK"]))

@@ -1,25 +1,47 @@
-"""Public megakernel entry point: compile a decode graph once, then run
-the whole step as ONE pallas_call (the paper's single kernel launch)."""
+"""Megakernel execution: a static plan compiled once, then a persistent
+executor that runs every decode step as ONE pallas_call against a
+device-resident heap (the paper's compile-once / step-many contract).
+
+``compile_decode_megakernel`` lowers a config's decode step to a
+:class:`~.desc.MegakernelPlan`; :class:`MegakernelExecutor` turns the plan
+into a live program:
+
+* ``make_megakernel`` + ``jax.jit`` trace happen exactly ONCE per
+  executor (assert via ``kernel.make_count()`` / ``trace_count``),
+* weights are packed into the f32 heap exactly once at ``upload()``
+  (``upload_count``),
+* KV-cache / conv / SSM state stays in place across steps — the kernel's
+  in-place aliasing plus jit buffer donation keep the heap resident,
+* per-step inputs (tokens, seq_lens, live_lens, positions) go through a
+  small scatter into the heap (``at[idx].set``) instead of a host-side
+  full-heap rebuild.
+
+``run_megakernel`` survives as the deprecated one-shot wrapper (rebuilds
+the heap and retraces per call) — new code should use ``repro.api``.
+"""
 from __future__ import annotations
 
-from typing import Any, Dict, Optional
+from typing import Any, Dict, List, Optional
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ...core.compile import CompileOptions, CompiledTGraph, megakernelize
+from ...core.compile import CompileOptions, megakernelize
 from ...core.decompose import DecomposeConfig
 from ...core.lowering import build_decode_graph, decode_bindings
-from .desc import MegakernelProgram, lower_tgraph
+from .desc import MegakernelPlan, lower_tgraph
 from .kernel import make_megakernel
 
-__all__ = ["compile_decode_megakernel", "run_megakernel"]
+__all__ = ["compile_decode_megakernel", "MegakernelExecutor",
+           "run_megakernel"]
 
 
 def compile_decode_megakernel(cfg, batch: int, max_seq: int,
                               *, max_rows: int = 8,
-                              latency_aware: bool = True
-                              ) -> MegakernelProgram:
+                              latency_aware: bool = True,
+                              event_fusion: bool = True
+                              ) -> MegakernelPlan:
     """Lower cfg's decode step end-to-end: op graph → tGraph → descriptors.
 
     ``max_rows`` caps tile rows (the megakernel's TM) — decode batches are
@@ -29,22 +51,208 @@ def compile_decode_megakernel(cfg, batch: int, max_seq: int,
     opts = CompileOptions(
         decompose=DecomposeConfig(max_rows=max_rows),
         latency_aware_schedule=latency_aware,
+        event_fusion=event_fusion,
     )
     compiled = megakernelize(g, opts)
     return lower_tgraph(compiled, cfg)
 
 
-def run_megakernel(prog: MegakernelProgram, cfg, params, cache,
+class MegakernelExecutor:
+    """The live half of a compiled megakernel program.
+
+    Lifecycle::
+
+        ex = MegakernelExecutor(plan, cfg)     # ONE make_megakernel
+        ex.upload(plan.build_heap(bindings))   # ONE full heap upload
+        logits = ex.step(tokens, seq_lens)     # partial update + 1 launch
+        logits = ex.step(tokens, seq_lens + 1) # state carried in-heap
+    """
+
+    def __init__(self, plan: MegakernelPlan, cfg):
+        self.plan = plan
+        self.cfg = cfg
+        self.trace_count = 0       # jit traces of the step function
+        self.upload_count = 0      # full heap uploads (weights included)
+        self.step_count = 0
+        g = plan.compiled.graph
+        classes = plan.input_classes()
+        self._per_step: List[str] = classes["per_step"]
+        self._state_inputs: List[str] = classes["state"]
+
+        # ---- flat heap indices of every per-step input element ----
+        idx_parts, self._entries = [], []
+        for name in self._per_step:
+            slot = plan.layout[name]
+            cols = slot.shape[-1] if slot.shape else 1
+            grid = (slot.offset
+                    + np.arange(slot.rows)[:, None] * slot.ld
+                    + np.arange(cols)[None, :])
+            self._entries.append((name, slot.rows, cols))
+            idx_parts.append(grid.ravel())
+        self._upd_idx = jnp.asarray(
+            np.concatenate(idx_parts).astype(np.int32))
+        self._descs = jnp.asarray(plan.descs)
+
+        # ---- per-slot state element indices (for init/reset zeroing) ----
+        self._batch = g.spec("seq_lens").shape[0]
+        self._state_idx = [self._state_indices(b)
+                           for b in range(self._batch)]
+        self._state_idx_all = np.concatenate(self._state_idx) \
+            if self._state_idx else np.zeros((0,), np.int32)
+        # ---- whole-state spans (for write_state scatter) ----
+        self._state_spans = []
+        span_idx = []
+        for name in self._state_inputs:
+            slot = plan.layout[name]
+            cols = slot.shape[-1] if slot.shape else 1
+            self._state_spans.append((name, slot.rows, slot.ld, cols))
+            span_idx.append(np.arange(slot.offset,
+                                      slot.offset + slot.rows * slot.ld))
+        self._state_span_idx = jnp.asarray(
+            np.concatenate(span_idx).astype(np.int32)) if span_idx else None
+        self.state_scatter_count = 0
+
+        # ---- the ONE kernel + the ONE jitted step ----
+        kern = make_megakernel(plan.statics, len(plan.compiled.order),
+                               plan.heap_size)
+        lg = plan.layout["logits"]
+        lg_cols = lg.shape[-1]
+
+        def _step(heap, vals):
+            self.trace_count += 1  # python side effect: runs at trace only
+            heap = heap.at[self._upd_idx].set(vals)
+            heap = kern(self._descs, heap)
+            logits = heap[lg.offset : lg.offset + lg.rows * lg.ld]
+            logits = logits.reshape(lg.rows, lg.ld)[:, :lg_cols]
+            return heap, logits
+
+        self._jstep = jax.jit(_step, donate_argnums=(0,))
+        self._jzero = jax.jit(
+            lambda heap, idx: heap.at[idx].set(0.0), donate_argnums=(0,))
+        self._jset = jax.jit(
+            lambda heap, idx, vals: heap.at[idx].set(vals),
+            donate_argnums=(0,))
+        self._heap: Optional[jax.Array] = None
+
+    # ------------------------------------------------------------ helpers
+    def _state_indices(self, b: int) -> np.ndarray:
+        """Flat heap indices of batch row ``b`` of every state tensor."""
+        parts = []
+        for name in self._state_inputs:
+            slot = self.plan.layout[name]
+            rpb = slot.rows // slot.shape[0]   # heap rows per batch entry
+            lo = slot.offset + b * rpb * slot.ld
+            parts.append(np.arange(lo, lo + rpb * slot.ld))
+        return np.concatenate(parts).astype(np.int32) if parts else \
+            np.zeros((0,), np.int32)
+
+    def _pack_step_inputs(self, tokens_or_embeds, seq_lens,
+                          positions=None) -> jax.Array:
+        lens = np.asarray(seq_lens, np.int32)
+        vals: Dict[str, np.ndarray] = {
+            "seq_lens": lens, "live_lens": lens + 1}
+        if self.cfg.embed_input:
+            vals["h0"] = np.asarray(tokens_or_embeds, np.float32)
+        else:
+            vals["tokens"] = np.asarray(tokens_or_embeds, np.int32)
+        if "positions" in self._per_step:
+            pos = np.asarray(lens if positions is None else positions)
+            if self.cfg.mrope_sections is not None and pos.ndim == 1:
+                pos = np.stack([pos] * 3, axis=-1)
+            vals["positions"] = pos
+        flat = [np.asarray(vals[name], np.float32).reshape(rows * cols)
+                for name, rows, cols in self._entries]
+        return jnp.asarray(np.concatenate(flat))
+
+    # ------------------------------------------------------------- public
+    def upload(self, heap: np.ndarray) -> None:
+        """Full heap upload — happens once per ``bind`` (weights + state)."""
+        self._heap = jnp.asarray(np.asarray(heap, np.float32))
+        self.upload_count += 1
+
+    def reset_state(self, slot: Optional[int] = None) -> None:
+        """Zero cache/conv/SSM state in place on device (one batch row, or
+        all of them in a single scatter) — a partial update, not a
+        re-upload."""
+        assert self._heap is not None, "upload() before reset_state()"
+        idx = self._state_idx_all if slot is None else self._state_idx[slot]
+        if idx.size:
+            self._heap = self._jzero(self._heap, jnp.asarray(idx))
+
+    def step(self, tokens_or_embeds, seq_lens, positions=None) -> np.ndarray:
+        """One decode step inside the persistent kernel; returns logits
+        (B, vocab).  State advances in the device-resident heap."""
+        assert self._heap is not None, "upload() before step()"
+        vals = self._pack_step_inputs(tokens_or_embeds, seq_lens, positions)
+        self._heap, logits = self._jstep(self._heap, vals)
+        self.step_count += 1
+        return np.asarray(logits)
+
+    def read_heap(self) -> np.ndarray:
+        """Host copy of the resident heap (state inspection / snapshots)."""
+        assert self._heap is not None, "upload() before read_heap()"
+        return np.array(self._heap)  # writable host copy
+
+    def write_heap(self, heap: np.ndarray) -> None:
+        """Replace the resident heap (state restore); counts as an upload."""
+        self.upload(heap)
+
+    def read_state(self) -> Dict[str, np.ndarray]:
+        """Gather every state tensor from the resident heap — a device
+        gather of the state spans only (O(state), weights never move).
+        Returns graph-shaped arrays keyed by state input name."""
+        assert self._heap is not None, "upload() before read_state()"
+        out: Dict[str, np.ndarray] = {}
+        if self._state_span_idx is None:
+            return out
+        flat = np.asarray(self._heap[self._state_span_idx])
+        off = 0
+        for name, rows, ld, cols in self._state_spans:
+            img = flat[off : off + rows * ld].reshape(rows, ld)
+            out[name] = img[:, :cols].reshape(
+                self.plan.layout[name].shape)
+            off += rows * ld
+        return out
+
+    def write_state(self, tensors: Dict[str, np.ndarray]) -> None:
+        """Scatter new values for every state tensor into the resident
+        heap (partial update — weights are never re-moved).  ``tensors``
+        maps state input names to graph-shaped arrays."""
+        assert self._heap is not None, "upload() before write_state()"
+        if self._state_span_idx is None:
+            return
+        parts = []
+        for name, rows, ld, cols in self._state_spans:
+            img = np.zeros((rows, ld), np.float32)  # pad columns stay 0
+            img[:, :cols] = np.asarray(tensors[name],
+                                       np.float32).reshape(rows, cols)
+            parts.append(img.ravel())
+        vals = jnp.asarray(np.concatenate(parts))
+        self._heap = self._jset(self._heap, self._state_span_idx, vals)
+        self.state_scatter_count += 1
+
+    def run_once(self, bindings: Dict[str, np.ndarray]
+                 ) -> Dict[str, np.ndarray]:
+        """Build the heap from full bindings, run one step, return every
+        graph output (legacy one-shot semantics)."""
+        self.upload(self.plan.build_heap(bindings))
+        lens = np.asarray(bindings["seq_lens"], np.int32)
+        if self.cfg.embed_input:
+            tok = bindings["h0"]
+        else:
+            tok = bindings["tokens"]
+        self.step(tok, lens, bindings.get("positions"))
+        heap = self.read_heap()
+        return {name: self.plan.read_output(heap, name)
+                for name in self.plan.compiled.graph.outputs}
+
+
+def run_megakernel(prog: MegakernelPlan, cfg, params, cache,
                    tokens_or_embeds, seq_lens,
                    positions=None) -> Dict[str, np.ndarray]:
-    """Execute one decode step inside the megakernel; returns all graph
-    outputs (logits + updated caches/states) keyed by tensor name."""
+    """DEPRECATED one-shot entry point: rebuilds the heap and retraces the
+    kernel on every call.  Kept for compatibility; use
+    ``repro.api.compile(..., backend="megakernel")`` instead."""
     bindings = decode_bindings(cfg, params, cache, tokens_or_embeds,
                                seq_lens, positions)
-    heap = prog.build_heap(bindings)
-    kern = make_megakernel(prog.statics, len(prog.compiled.order),
-                           prog.heap_size)
-    out_heap = np.asarray(kern(jnp.asarray(prog.descs),
-                               jnp.asarray(heap)))
-    return {name: prog.read_output(out_heap, name)
-            for name in prog.compiled.graph.outputs}
+    return MegakernelExecutor(prog, cfg).run_once(bindings)

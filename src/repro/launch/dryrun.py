@@ -27,9 +27,28 @@ import jax
 import numpy as np
 
 
+def program_stats(arch: str, shape) -> dict:
+    """Compiler-side Program stats for a cell (``repro.api`` interpreter
+    backend — no execution): task/event counts and the liveness-packed
+    workspace footprint at a serving-representative (batch, seq)."""
+    from repro.api import compile as mpk_compile
+    from repro.configs import get_config
+
+    cfg = get_config(arch)
+    batch = min(8, shape.global_batch)
+    max_seq = min(1024, shape.seq_len)
+    prog = mpk_compile(cfg, batch, max_seq, backend="interpreter")
+    rec = prog.describe()
+    s = prog.stats
+    rec["workspace_reuse_x"] = round(s["workspace_reuse_x"], 2)
+    rec["fusion_reduction"] = round(s["fusion_reduction"], 1)
+    return rec
+
+
 def run_cell(arch: str, shape_name: str, multi_pod: bool,
              out_dir: Path, microbatches: int = 1,
-             dump_hlo: bool = False, overrides: dict | None = None) -> dict:
+             dump_hlo: bool = False, overrides: dict | None = None,
+             with_program_stats: bool = False) -> dict:
     # late imports: jax device count must be pinned first
     from repro.configs import SHAPES, get_config
     from repro.launch.mesh import make_production_mesh
@@ -49,6 +68,8 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
         rec["status"] = "skipped"
         rec["reason"] = why
         return rec
+    if with_program_stats:
+        rec["program"] = program_stats(arch, shape)
 
     mesh = make_production_mesh(multi_pod=multi_pod)
     chips = int(np.prod(list(mesh.shape.values())))
@@ -191,6 +212,9 @@ def main() -> int:
                     help="2D expert GEMM (weights never move) for decode")
     ap.add_argument("--tag", default="",
                     help="suffix for the result json (perf variants)")
+    ap.add_argument("--program-stats", action="store_true",
+                    help="record repro.api Program compiler stats (tasks/"
+                         "events/workspace) in each cell json")
     args = ap.parse_args()
     overrides = {}
     if args.no_sp:
@@ -225,7 +249,8 @@ def main() -> int:
                     rec = run_cell(arch, shape, mp, out_dir,
                                    microbatches=args.microbatches,
                                    dump_hlo=args.dump_hlo,
-                                   overrides=overrides or None)
+                                   overrides=overrides or None,
+                                   with_program_stats=args.program_stats)
                 except Exception as e:
                     rec = {"arch": arch, "shape": shape,
                            "mesh": "multipod" if mp else "pod",

@@ -1,13 +1,16 @@
-"""Serving launcher: ``python -m repro.launch.serve --arch <id>-reduced``.
+"""Serving launcher: ``mpk-serve`` / ``python -m repro.launch.serve``.
 
-Continuous-batching engine over the decode path: chunked prefill
-(``--chunk`` prompt tokens per iteration, ``--prefill-mode token`` for
-the legacy one-token baseline), page-pressure preemption
-(``--total-pages`` oversubscribes the KV page pool), and per-request
-latency metrics (TTFT / TPOT / queue time) over a Poisson-arrival
-workload (``--arrival-rate`` req/s; 0 = all requests arrive at t=0).
-``--megakernel`` additionally runs a decode batch through the Pallas
-persistent megakernel (interpret mode on CPU) and cross-checks logits.
+Continuous-batching engine over a compiled ``repro.api.Program``:
+``--backend {jax,interpreter,megakernel}`` picks the execution backend
+(pure-decode iterations run inside it; the megakernel backend serves
+them as single persistent-kernel launches against its device-resident
+heap).  Chunked prefill (``--chunk`` prompt tokens per iteration,
+``--prefill-mode token`` for the legacy one-token baseline),
+page-pressure preemption (``--total-pages`` oversubscribes the KV page
+pool), and per-request latency metrics (TTFT / TPOT / queue time) over a
+Poisson-arrival workload (``--arrival-rate`` req/s; 0 = all requests
+arrive at t=0).  ``--crosscheck`` additionally decodes a batch through
+every backend and asserts logits parity.
 """
 from __future__ import annotations
 
@@ -42,14 +45,23 @@ def run_engine(cfg, params, reqs, *, slots: int, max_seq: int,
                chunk: int, prefill_mode: str, page_size: int = 32,
                total_pages: Optional[int] = None,
                token_budget: Optional[int] = None,
-               step_cache=None):
+               backend: str = "jax", step_cache=None, program=None):
     from repro.runtime import ServingEngine
 
-    engine = ServingEngine(cfg, params, max_slots=slots, max_seq=max_seq,
-                           chunk=chunk, prefill_mode=prefill_mode,
-                           page_size=page_size, total_pages=total_pages,
-                           token_budget=token_budget,
-                           step_cache=step_cache)
+    if program is None:
+        engine = ServingEngine.from_model(
+            cfg, params, max_slots=slots, max_seq=max_seq,
+            backend=backend, step_cache=step_cache, chunk=chunk,
+            prefill_mode=prefill_mode, page_size=page_size,
+            total_pages=total_pages, token_budget=token_budget)
+    else:
+        assert program.backend == backend, (
+            f"program backend {program.backend!r} != requested {backend!r}")
+        engine = ServingEngine(program, chunk=chunk,
+                               prefill_mode=prefill_mode,
+                               page_size=page_size,
+                               total_pages=total_pages,
+                               token_budget=token_budget)
     for r in reqs:
         engine.submit(r)
     engine.run()
@@ -76,11 +88,18 @@ def main() -> None:
     ap.add_argument("--arrival-rate", type=float, default=0.0,
                     help="Poisson arrival rate in req/s (0 = offline)")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--backend", choices=["jax", "interpreter",
+                                          "megakernel"], default="jax",
+                    help="Program execution backend for decode steps")
     ap.add_argument("--warmup", action="store_true",
                     help="pre-compile all jit step widths on a throwaway "
                          "engine so the reported TTFT/TPOT measure the "
                          "schedule, not XLA compile time")
-    ap.add_argument("--megakernel", action="store_true")
+    ap.add_argument("--crosscheck", "--megakernel", dest="crosscheck",
+                    action="store_true",
+                    help="decode a batch through every backend and assert "
+                         "logits parity (--megakernel is the deprecated "
+                         "alias)")
     args = ap.parse_args()
 
     from repro.configs import get_config
@@ -94,6 +113,12 @@ def main() -> None:
     reqs = poisson_workload(rng, args.requests, args.prompt_len,
                             args.max_new, cfg.vocab, args.arrival_rate)
     step_cache: dict = {}
+    # compile ONCE; the warmup and timed runs share the same Program so
+    # the timed TTFT/TPOT never include the jit/pallas trace
+    from repro.api import compile as mpk_compile
+    program = mpk_compile(cfg, args.slots, args.max_seq,
+                          backend=args.backend,
+                          step_cache=step_cache).bind(params)
     if args.warmup:
         warm = poisson_workload(np.random.default_rng(args.seed),
                                 args.requests, args.prompt_len,
@@ -103,7 +128,11 @@ def main() -> None:
                    prefill_mode=args.prefill_mode,
                    page_size=args.page_size,
                    total_pages=args.total_pages,
-                   token_budget=args.token_budget, step_cache=step_cache)
+                   token_budget=args.token_budget,
+                   backend=args.backend, program=program)
+    steps0 = program.step_count
+    scatters0 = (program.executor.state_scatter_count
+                 if args.backend == "megakernel" else 0)
     t0 = time.time()
     engine = run_engine(cfg, params, reqs, slots=args.slots,
                         max_seq=args.max_seq, chunk=args.chunk,
@@ -111,14 +140,23 @@ def main() -> None:
                         page_size=args.page_size,
                         total_pages=args.total_pages,
                         token_budget=args.token_budget,
-                        step_cache=step_cache)
+                        backend=args.backend, program=program)
     dt = time.time() - t0
     done = engine.finished
     tokens = sum(len(r.output) for r in done)
     print(f"[serve] {len(done)} requests, {tokens} tokens, "
-          f"{engine.iterations} iterations in {dt:.1f}s "
+          f"{engine.iterations} iterations "
+          f"({engine.decode_iterations} pure-decode via "
+          f"{args.backend}) in {dt:.1f}s "
           f"({tokens / max(dt, 1e-9):.1f} tok/s, "
           f"prefill={args.prefill_mode} chunk={engine.chunk})")
+    if args.backend == "megakernel":
+        prog = engine.program
+        print(f"[serve] megakernel program: {prog.trace_count} jit trace, "
+              f"{prog.upload_count} full weight upload, "
+              f"{prog.executor.state_scatter_count - scatters0} state "
+              f"scatters (prefill), {prog.step_count - steps0} in-kernel "
+              f"decode steps this run")
     summary = engine.metrics_summary()
     for key in ("ttft", "queue", "tpot"):
         if f"{key}_mean_s" in summary:
@@ -129,26 +167,27 @@ def main() -> None:
     for r in done[:3]:
         print(f"  req {r.request_id}: {r.output[:8]}...")
 
-    if args.megakernel:
-        from repro.kernels.megakernel import run_megakernel
-        from repro.kernels.megakernel.ops import compile_decode_megakernel
-        from repro.models import init_cache, serve_step
+    if args.crosscheck:
+        from repro.api import BACKENDS, compile as mpk_compile
 
-        b, s = 2, 16
-        prog = compile_decode_megakernel(cfg, b, s)
-        cache = jax.tree.map(np.asarray,
-                             init_cache(cfg, b, s, dtype=jnp.float32))
-        toks = np.asarray(rng.integers(1, cfg.vocab, size=b), np.int32)
+        b, s, n_steps = 2, 16, 4
+        progs = {bk: mpk_compile(cfg, b, s, backend=bk).bind(params)
+                 .init_state() for bk in BACKENDS}
         lens = np.zeros((b,), np.int32)
-        params_np = jax.tree.map(np.asarray, params)
-        out = run_megakernel(prog, cfg, params_np, cache, toks, lens)
-        ref, _ = serve_step(params, cfg,
-                            jax.tree.map(jnp.asarray, cache),
-                            jnp.asarray(toks), jnp.asarray(lens))
-        err = float(np.max(np.abs(out["logits"] - np.asarray(ref))))
-        print(f"[serve] megakernel single-launch decode: "
-              f"{len(prog.compiled.order)} tasks in 1 pallas_call, "
-              f"|logits - jax| = {err:.2e}")
+        err = 0.0
+        for _ in range(n_steps):
+            toks = np.asarray(rng.integers(1, cfg.vocab, size=b), np.int32)
+            outs = {bk: p.step(toks, lens) for bk, p in progs.items()}
+            for bk in BACKENDS[1:]:
+                err = max(err, float(
+                    np.abs(outs[bk] - outs["jax"]).max()))
+            lens += 1
+        mk = progs["megakernel"]
+        print(f"[serve] crosscheck: {n_steps}-step decode, "
+              f"{len(mk.plan.compiled.order)} tasks/launch, "
+              f"{mk.trace_count} trace / {mk.upload_count} upload, "
+              f"max |logits - jax| = {err:.2e}")
+        assert err < 3e-4, "backend logits diverged"
 
 
 if __name__ == "__main__":

@@ -1,18 +1,23 @@
 """Continuous-batching serving engine (paper §6.1): chunked prefill,
-page-pressure preemption, per-request latency metrics.
+page-pressure preemption, per-request latency metrics — driving a
+backend-agnostic compiled :class:`repro.api.Program`.
 
 Every iteration: (1) retire finished requests, (2) admit newly arrived
 ones (slot-gated only — page pressure is resolved by preemption, not by
-blocking admission), (3) plan a per-slot token chunk under a shared
-iteration token budget (decode slots first, then prefill chunks FCFS),
-(4) evict the lowest-priority request back to ``waiting`` if the planned
-growth exceeds the free page quota, then (5) run ONE ``prefill_chunk``
-over the whole batch — decode slots are 1-token chunks, prefilling slots
-consume up to ``prefill_chunk`` prompt tokens, through the exact same
-cache-write machinery, so mixing phases never changes any request's
+blocking admission; the admitted slot's stale cache/SSM state is zeroed
+through ``Program.reset_slot``), (3) plan a per-slot token chunk under a
+shared iteration token budget (decode slots first, then prefill chunks
+FCFS), (4) evict the lowest-priority request back to ``waiting`` if the
+planned growth exceeds the free page quota, then (5) run ONE program
+call over the whole batch: iterations where every running request
+decodes exactly one token dispatch to ``Program.step`` — for the
+megakernel backend that is a single persistent-kernel launch against the
+device-resident heap — and mixed prefill/decode iterations dispatch to
+``Program.prefill`` (decode slots are 1-token chunks), through the exact
+same cache-write machinery, so mixing phases never changes any request's
 sampled stream.  Like the paper's per-batch-size tGraph specialization,
-the engine caches jitted step functions keyed by the power-of-two chunk
-width and dispatches to the smallest width that fits the iteration.
+the program caches jitted prefill functions keyed by the power-of-two
+chunk width and the engine dispatches to the smallest width that fits.
 
 Preemption is recompute-style: an evicted request's KV quota is dropped
 and on re-admission it replays ``prompt + output`` through prefill — the
@@ -25,11 +30,8 @@ import dataclasses
 import time
 from typing import Callable, Dict, List, Optional
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
-from ..models import init_cache, prefill_chunk
 from .kv_cache import PagedKVCache
 
 __all__ = ["Request", "RequestMetrics", "ServingEngine"]
@@ -81,7 +83,14 @@ class Request:
 
 
 class ServingEngine:
-    """Single-host reference engine driving ``prefill_chunk``.
+    """Single-host engine driving a compiled backend-agnostic ``Program``.
+
+    The program supplies the model, the weights and the resident
+    cache/state; the engine owns scheduling only.  Construct one with
+    ``ServingEngine(program, ...)`` where ``program`` came from
+    ``repro.api.compile(cfg, batch, max_seq, backend=...)`` and has been
+    ``bind()``-ed, or use :meth:`from_model` for the legacy
+    ``(cfg, params)`` form (a jax-backend program is compiled for you).
 
     ``prefill_mode="chunked"`` (default) consumes up to ``chunk`` prompt
     tokens per iteration per prefilling request; ``"token"`` pins the
@@ -95,19 +104,23 @@ class ServingEngine:
     per iteration across the batch.
     """
 
-    def __init__(self, cfg, params, *, max_slots: int = 8,
-                 max_seq: int = 128, page_size: int = 32,
+    def __init__(self, program, *, page_size: int = 32,
                  greedy: bool = True, chunk: int = 16,
                  token_budget: Optional[int] = None,
                  prefill_mode: str = "chunked",
-                 total_pages: Optional[int] = None,
-                 step_cache: Optional[Dict[tuple, Callable]] = None):
+                 total_pages: Optional[int] = None):
         assert prefill_mode in ("chunked", "token"), prefill_mode
-        self.cfg = cfg
-        self.params = params
+        from ..api import Program  # late: keep runtime importable alone
+        assert isinstance(program, Program), (
+            "ServingEngine consumes a compiled repro.api.Program; build "
+            "one with repro.api.compile(...) (or ServingEngine.from_model "
+            "for the legacy (cfg, params) form)")
+        self.program = program
+        self.cfg = program.cfg
+        max_slots, max_seq = program.batch, program.max_seq
         self.kv = PagedKVCache(max_slots, max_seq, page_size,
                                total_pages=total_pages)
-        self.cache = init_cache(cfg, max_slots, max_seq, dtype=jnp.float32)
+        program.init_state()
         self.waiting: List[Request] = []
         self.running: Dict[int, Request] = {}
         self.finished: List[Request] = []
@@ -119,11 +132,8 @@ class ServingEngine:
             raise ValueError(
                 f"token_budget must be >= 1, got {self.token_budget} "
                 "(a zero budget schedules no tokens and the engine spins)")
-        # (cfg, chunk width) -> jitted step; pass a shared dict to
-        # reuse compiled steps across engines (benchmark warmup)
-        self._steps: Dict[tuple, Callable] = \
-            step_cache if step_cache is not None else {}
         self.iterations = 0
+        self.decode_iterations = 0    # iterations served by Program.step
         self._slot_tokens = np.zeros((max_slots,), np.int64)
         self._pending_prefill: Dict[int, List[int]] = {}
         # rid -> earliest scheduler tick for re-admission after a
@@ -137,10 +147,26 @@ class ServingEngine:
         self._t0 = time.monotonic()
 
     # ------------------------------------------------------------- public
+    @classmethod
+    def from_model(cls, cfg, params, *, max_slots: int = 8,
+                   max_seq: int = 128, backend: str = "jax",
+                   step_cache: Optional[Dict[tuple, Callable]] = None,
+                   **kw) -> "ServingEngine":
+        """Legacy construction from ``(cfg, params)``: compiles a Program
+        for ``backend`` and binds the weights."""
+        from ..api import compile as mpk_compile
+        program = mpk_compile(cfg, max_slots, max_seq, backend=backend,
+                              step_cache=step_cache).bind(params)
+        return cls(program, **kw)
+
     def _now(self) -> float:
         return time.monotonic() - self._t0
 
     def submit(self, req: Request) -> None:
+        if not req.prompt:
+            raise ValueError(
+                f"request {req.request_id}: empty prompt — there is no "
+                "position to sample the first token from")
         if len(req.prompt) + req.max_new_tokens > self.kv.max_seq:
             raise ValueError(
                 f"request {req.request_id}: prompt ({len(req.prompt)}) + "
@@ -155,23 +181,6 @@ class ServingEngine:
             req.arrival_time = self._now()
         req.metrics.arrival_s = req.arrival_time
         self.waiting.append(req)
-
-    def _step_fn(self, n: int) -> Callable:
-        """Jitted step for chunk width ``n`` (the only shape
-        specialization — the step always runs over all slots, inactive
-        ones masked out via ``chunk_lens == 0``).  The cache key includes
-        the config so a shared ``step_cache`` can never hand one model's
-        compiled step to an engine running another."""
-        key = (self.cfg, n)
-        if key not in self._steps:
-            cfg = self.cfg
-
-            def fn(params, cache, tokens, seq_lens, chunk_lens):
-                return prefill_chunk(params, cfg, cache, tokens, seq_lens,
-                                     chunk_lens)
-
-            self._steps[key] = jax.jit(fn, donate_argnums=(1,))
-        return self._steps[key]
 
     # ---------------------------------------------------------- scheduling
     def _plan(self) -> Dict[int, int]:
@@ -254,6 +263,9 @@ class ServingEngine:
             self.waiting.remove(req)
             self._backoff.pop(req.request_id, None)
             req.slot = self.kv.admit(req.request_id, 0)
+            # slot reuse: zero the slot's cache/conv/SSM state so the new
+            # (or replayed) request never sees a predecessor's state
+            self.program.reset_slot(req.slot)
             self.running[req.request_id] = req
             # replay stream: prompt plus anything sampled before a
             # preemption (empty output for fresh requests)
@@ -270,12 +282,17 @@ class ServingEngine:
         maxn = max(plan.values(), default=0)
         if maxn == 0:
             return len(self.running)
-        # (5) one batched chunk step; width padded to a power of two so
+        # (5) one batched program call; width padded to a power of two so
         # the jit cache stays small (padding is masked via chunk_lens)
         n_pad = 1 << (maxn - 1).bit_length()
         tokens = np.zeros((self.kv.n_slots, n_pad), np.int32)
         chunk_lens = np.zeros((self.kv.n_slots,), np.int32)
         seq_lens = np.asarray(self.kv.seq_lens(), np.int32)
+        # every running request decoding exactly one token -> the pure
+        # decode path, served inside the backend (for the megakernel this
+        # is one persistent-kernel launch; free slots are reset at admit)
+        pure_decode = (not self._pending_prefill
+                       and all(plan.get(rid, 0) == 1 for rid in self.running))
         for rid, n in plan.items():
             if n == 0:
                 continue
@@ -289,12 +306,11 @@ class ServingEngine:
             else:
                 tokens[req.slot, 0] = self._slot_tokens[req.slot]
             chunk_lens[req.slot] = n
-        step = self._step_fn(n_pad)
-        logits, self.cache = step(self.params, self.cache,
-                                  jnp.asarray(tokens),
-                                  jnp.asarray(seq_lens),
-                                  jnp.asarray(chunk_lens))
-        logits = np.asarray(logits)
+        if pure_decode:
+            logits = self.program.step(tokens[:, 0], seq_lens)[:, None]
+            self.decode_iterations += 1
+        else:
+            logits = self.program.prefill(tokens, seq_lens, chunk_lens)
         # (6) sample + bookkeeping: a request samples only once its whole
         # replay stream has been consumed (logits of its LAST fed token)
         t_done = self._now()
@@ -341,6 +357,7 @@ class ServingEngine:
 
         out = {"n_finished": float(len(ms)),
                "iterations": float(self.iterations),
+               "decode_iterations": float(self.decode_iterations),
                "preemptions": float(sum(m.n_preemptions for m in ms))}
         out.update(stats("ttft", ttft))
         out.update(stats("queue", queue))

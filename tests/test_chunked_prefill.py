@@ -139,7 +139,7 @@ def test_engine_chunked_equals_token_mode():
                for _ in range(3)]
     outs, iters = {}, {}
     for mode in ("token", "chunked"):
-        eng = ServingEngine(cfg, params, max_slots=2, max_seq=64,
+        eng = ServingEngine.from_model(cfg, params, max_slots=2, max_seq=64,
                             prefill_mode=mode, chunk=8)
         for i, p in enumerate(prompts):
             eng.submit(Request(i, p, max_new_tokens=4))
@@ -151,7 +151,7 @@ def test_engine_chunked_equals_token_mode():
 
 def test_engine_metrics_populated():
     cfg, params = _make()
-    eng = ServingEngine(cfg, params, max_slots=2, max_seq=32)
+    eng = ServingEngine.from_model(cfg, params, max_slots=2, max_seq=32)
     eng.submit(Request(0, [3, 7, 11], max_new_tokens=3))
     (req,) = eng.run()
     m = req.metrics
@@ -165,7 +165,7 @@ def test_token_budget_caps_iteration_tokens():
     """With budget 4 and chunk 8, a single 8-token prompt needs two
     prefill iterations before the first sample."""
     cfg, params = _make()
-    eng = ServingEngine(cfg, params, max_slots=1, max_seq=32,
+    eng = ServingEngine.from_model(cfg, params, max_slots=1, max_seq=32,
                         chunk=8, token_budget=4)
     eng.submit(Request(0, list(range(1, 9)), max_new_tokens=2))
     eng.step()          # admits + consumes 4 prompt tokens
@@ -207,7 +207,7 @@ def test_preemption_roundtrip_exact_streams():
     reqs = [Request(i, rng.integers(1, cfg.vocab, size=20).tolist(),
                     max_new_tokens=8) for i in range(5)]
     # 3 slots x 4 pages dense, but only 6 pages of quota
-    eng = ServingEngine(cfg, params, max_slots=3, max_seq=32, page_size=8,
+    eng = ServingEngine.from_model(cfg, params, max_slots=3, max_seq=32, page_size=8,
                         chunk=8, total_pages=6)
     for r in reqs:
         eng.submit(r)
@@ -218,7 +218,7 @@ def test_preemption_roundtrip_exact_streams():
     # KV metadata fully drained
     assert eng.kv.by_request == {} and eng.kv.used_pages == 0
     for r in done.values():
-        iso = ServingEngine(cfg, params, max_slots=1, max_seq=32,
+        iso = ServingEngine.from_model(cfg, params, max_slots=1, max_seq=32,
                             page_size=8)
         iso.submit(Request(r.request_id, r.prompt, max_new_tokens=8))
         assert r.output == iso.run()[0].output, \

@@ -26,12 +26,12 @@ def test_batched_equals_isolated():
     # isolated: one engine per request
     isolated = []
     for i, p in enumerate(prompts):
-        eng = ServingEngine(cfg, params, max_slots=1, max_seq=32)
+        eng = ServingEngine.from_model(cfg, params, max_slots=1, max_seq=32)
         eng.submit(Request(i, p, max_new_tokens=6))
         isolated.append(eng.run()[0].output)
 
     # batched with fewer slots than requests (forces queueing + reuse)
-    eng = ServingEngine(cfg, params, max_slots=2, max_seq=32)
+    eng = ServingEngine.from_model(cfg, params, max_slots=2, max_seq=32)
     for i, p in enumerate(prompts):
         eng.submit(Request(i, p, max_new_tokens=6))
     done = {r.request_id: r.output for r in eng.run()}
@@ -60,25 +60,28 @@ def test_slot_reuse_after_release():
     assert s0 == s1
 
 
-def test_engine_step_cache_keyed_by_cfg_and_width():
-    """Jitted steps specialize on (config, chunk width) — a shared cache
-    can never hand one model's compiled step to another engine."""
+def test_program_step_cache_keyed_by_cfg_and_width():
+    """Jitted prefill steps specialize on (config, chunk width) — a
+    shared cache can never hand one model's compiled step to another
+    program/engine."""
     cfg, params = _make()
     shared = {}
-    eng = ServingEngine(cfg, params, max_slots=2, max_seq=32,
-                        step_cache=shared)
-    f1, f2, f1b = eng._step_fn(1), eng._step_fn(2), eng._step_fn(1)
+    eng = ServingEngine.from_model(cfg, params, max_slots=2, max_seq=32,
+                                   step_cache=shared)
+    prog = eng.program
+    f1, f2, f1b = (prog._prefill_fn(1), prog._prefill_fn(2),
+                   prog._prefill_fn(1))
     assert f1 is f1b and f1 is not f2
     assert set(shared) == {(cfg, 1), (cfg, 2)}
     cfg2, params2 = _make("gemma-7b")
-    eng2 = ServingEngine(cfg2, params2, max_slots=2, max_seq=32,
-                         step_cache=shared)
-    assert eng2._step_fn(1) is not f1
+    eng2 = ServingEngine.from_model(cfg2, params2, max_slots=2, max_seq=32,
+                                    step_cache=shared)
+    assert eng2.program._prefill_fn(1) is not f1
 
 
 def test_submit_rejects_oversized_request():
     cfg, params = _make()
-    eng = ServingEngine(cfg, params, max_slots=1, max_seq=16,
+    eng = ServingEngine.from_model(cfg, params, max_slots=1, max_seq=16,
                         page_size=16)
     with np.testing.assert_raises(ValueError):
         eng.submit(Request(0, list(range(1, 13)), max_new_tokens=8))
