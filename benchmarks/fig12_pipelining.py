@@ -1,14 +1,36 @@
-"""Fig. 12 reproduction: cross-task software pipelining on the final
-linear layer (LM head) of Qwen3-8B.
+"""Fig. 12/13 reproduction: cross-task software pipelining in the
+megakernel.
 
-On TPU, Pallas's cross-grid-step double buffering prefetches task N+1's
-tiles while task N computes (DESIGN.md §2).  The ablation is analytic
-over the LM-head task set: with pipelining, tile time =
-max(load, compute); without, load + compute.  The layer is strongly
-memory-bound at batch 1, so the paper's 1.2–1.3× is the expected ratio.
-Also measured: interpret-mode Pallas matmul wall time with K-grid
-pipelining vs a serialized single-step grid (structural check only)."""
+Three measurements, matching the paper's overlap-ablation shape:
+
+1. **Analytic** (the original Fig. 12 check): final-linear (LM head) tile
+   stream at batch 1 — pipelined tile time = max(load, compute) vs
+   load + compute; the layer is memory-bound so the expected ratio is the
+   paper's 1.2–1.3×.
+2. **Simulated** (discrete-event runtime model): compiled dense / MoE /
+   SSM decode graphs swept over ``pipelined`` {on, off} × pipeline depth
+   {1, 2, 4}.  ``pipelined=off`` models the per-row synchronous-copy
+   kernel this PR replaced; ``on`` models the double-buffered prefetch
+   pipeline, with tasks the schedule placed closer than the depth to a
+   producer paying the demand-load stall.  Stall counts are reported for
+   naive FIFO linearization vs the stall-aware scheduler.
+3. **Wall-clock** (interpret-mode megakernel): per-step time on the
+   quickstart model plus the kernel's own DMA counters — bulk tile DMAs
+   issued vs the row copies they batch (the pre-PR kernel issued every
+   row as its own synchronous DMA), prefetch coverage, demand-load
+   misses.
+
+``--json PATH`` writes the whole table as BENCH_pipelining.json — the
+nightly perf-trajectory artifact; the committed copy under benchmarks/ is
+the regression baseline the fast-lane smoke test checks against.
+"""
 from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import time
+from pathlib import Path
 
 import numpy as np
 
@@ -19,9 +41,15 @@ from .common import emit
 HBM = 819e9
 PEAK = 197e12
 
+#: one family per acceptance criterion; reduced() keeps nightly cheap
+FAMILIES = {"dense": "deepseek-7b",
+            "moe": "granite-moe-1b-a400m",
+            "ssm": "mamba2-2.7b"}
+DEPTHS = (1, 2, 4)
 
-def main() -> None:
-    print("# Fig 12: cross-task pipelining, final linear (analytic)")
+
+def analytic() -> dict:
+    """The original analytic check on Qwen3-8B's LM head."""
     cfg = get_config("qwen3-8b")
     d, v = cfg.d_model, cfg.vocab
     tiles = max(1, v // 256)
@@ -34,10 +62,113 @@ def main() -> None:
     emit("fig12/no_pipe_us", no_pipe * 1e6, f"tiles={tiles}")
     emit("fig12/pipe_us", pipe * 1e6,
          f"speedup={no_pipe / pipe:.2f}x (paper: 1.2-1.3x)")
-    # arithmetic intensity confirms memory-bound
     emit("fig12/arith_intensity", per_tile_flops / per_tile_bytes,
          "flops/byte (<240 => memory-bound on v5e)")
+    return {"no_pipe_us": no_pipe * 1e6, "pipe_us": pipe * 1e6,
+            "speedup": no_pipe / pipe}
+
+
+def simulated_sweep() -> dict:
+    """pipelined {on,off} × depth {1,2,4} over compiled decode graphs."""
+    from repro.core.compile import CompileOptions, megakernelize
+    from repro.core.lowering import build_decode_graph
+    from repro.core.runtime_sim import SimConfig, simulate
+
+    out: dict = {}
+    print("# Fig 12b: simulated makespan, pipelined on/off x depth "
+          "(mode=mpk)")
+    print(f"{'model':8s} {'depth':5s} {'stalls(naive)':>13s} "
+          f"{'stalls(sched)':>13s} {'off_us':>9s} {'on_us':>9s} "
+          f"{'speedup':>8s}")
+    for fam, arch in FAMILIES.items():
+        cfg = dataclasses.replace(get_config(arch).reduced(), n_layers=2)
+        out[fam] = {}
+        for depth in DEPTHS:
+            # one compile per cell: the scheduler records the naive
+            # linearization's stall count alongside its own
+            sched = megakernelize(build_decode_graph(cfg, 2, 32),
+                                  CompileOptions(pipeline_depth=depth))
+            off = simulate(sched, SimConfig(mode="mpk", pipelined=False,
+                                            pipeline_depth=depth))
+            on = simulate(sched, SimConfig(mode="mpk", pipelined=True,
+                                           pipeline_depth=depth))
+            row = {
+                "stalls_naive": sched.stats["pipeline_stalls_naive"],
+                "stalls_scheduled": sched.stats["pipeline_stalls"],
+                "makespan_off_us": off.makespan * 1e6,
+                "makespan_on_us": on.makespan * 1e6,
+                "speedup": off.makespan / max(on.makespan, 1e-30),
+            }
+            out[fam][f"depth{depth}"] = row
+            print(f"{fam:8s} {depth:5d} {row['stalls_naive']:13d} "
+                  f"{row['stalls_scheduled']:13d} "
+                  f"{row['makespan_off_us']:9.1f} "
+                  f"{row['makespan_on_us']:9.1f} {row['speedup']:7.2f}x")
+            emit(f"fig12/{fam}_d{depth}_makespan_on_us",
+                 row["makespan_on_us"],
+                 f"off={row['makespan_off_us']:.1f}us "
+                 f"speedup={row['speedup']:.2f}x "
+                 f"stalls={row['stalls_scheduled']} "
+                 f"(naive {row['stalls_naive']})")
+    return out
+
+
+def wallclock_quickstart(steps: int = 4) -> dict:
+    """Interpret-mode megakernel wall clock + kernel DMA counters on the
+    quickstart model (the fast-lane smoke baseline)."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro import api
+    from repro.models import init_params
+
+    cfg = get_config("deepseek-7b").reduced()     # the quickstart model
+    params = init_params(cfg, jax.random.PRNGKey(0), jnp.float32)
+    b, s = 2, 16
+    prog = api.compile(cfg, b, s, backend="megakernel")
+    prog.bind(params).init_state()
+    rng = np.random.default_rng(0)
+    lens = np.zeros((b,), np.int32)
+    toks = rng.integers(1, cfg.vocab, size=b).astype(np.int32)
+    prog.step(toks, lens)                          # warmup / trace
+    lens += 1
+    t0 = time.perf_counter()
+    for _ in range(steps):
+        prog.step(toks, lens)
+        lens += 1
+    step_ms = (time.perf_counter() - t0) / steps * 1e3
+    ps = prog.pipeline_stats
+    rows_per_bulk = ps["row_copies"] / max(1, ps["bulk_copies"])
+    emit("fig12/quickstart_step_ms", step_ms, "interpret-mode megakernel")
+    emit("fig12/quickstart_bulk_dma", ps["bulk_copies"],
+         f"rows={ps['row_copies']} ({rows_per_bulk:.1f} rows/bulk; "
+         f"pre-PR kernel = 1 DMA/row)")
+    emit("fig12/quickstart_prefetch_coverage",
+         100.0 * ps["prefetch_coverage"],
+         f"%; misses={ps['primary_fallbacks']}/step "
+         f"stalls={ps['stalls']}")
+    return {"step_ms": step_ms, **ps, "rows_per_bulk": rows_per_bulk}
+
+
+def main(argv=None) -> None:
+    # benchmarks.run calls main() with section names still in sys.argv —
+    # only the direct `python -m benchmarks.fig12_pipelining` entry point
+    # passes the real CLI through
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--json", type=Path, default=None,
+                    help="write BENCH_pipelining.json here")
+    args = ap.parse_args([] if argv is None else argv)
+
+    print("# Fig 12: cross-task pipelining, final linear (analytic)")
+    rec = {"analytic": analytic(),
+           "simulated": simulated_sweep(),
+           "quickstart": wallclock_quickstart()}
+    if args.json:
+        args.json.parent.mkdir(parents=True, exist_ok=True)
+        args.json.write_text(json.dumps(rec, indent=2, sort_keys=True))
+        print(f"# wrote {args.json}")
 
 
 if __name__ == "__main__":
-    main()
+    import sys
+    main(sys.argv[1:])

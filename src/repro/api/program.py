@@ -100,10 +100,12 @@ class Program:
     backend = "abstract"
 
     def __init__(self, cfg, batch: int, max_seq: int,
-                 step_cache: Optional[Dict[tuple, Callable]] = None):
+                 step_cache: Optional[Dict[tuple, Callable]] = None,
+                 pipeline_depth: int = 2):
         self.cfg = cfg
         self.batch = batch
         self.max_seq = max_seq
+        self.pipeline_depth = pipeline_depth
         self.step_count = 0
         # (cfg, width)-keyed jitted prefill fns; pass a shared dict to
         # reuse compiled steps across programs/engines (benchmark warmup)
@@ -186,12 +188,29 @@ class Program:
         """The compiled tGraph (built lazily for the jax backend)."""
         if self._compiled is None:
             g = build_decode_graph(self.cfg, self.batch, self.max_seq)
-            self._compiled = megakernelize(g)
+            self._compiled = megakernelize(g, CompileOptions(
+                pipeline_depth=self.pipeline_depth))
         return self._compiled
 
     @property
     def stats(self) -> Dict[str, Any]:
         return self.compiled.stats
+
+    @property
+    def pipeline_stats(self) -> Dict[str, Any]:
+        """The schedule→kernel pipeline contract, compiler side: stall
+        counts at the configured pipeline depth and the scheduler's
+        reduction over naive linearization.  The megakernel backend
+        extends this with the prefetch plan's coverage and — after a
+        step — the kernel's own DMA counters."""
+        s = self.compiled.stats
+        return {
+            "stalls": s.get("pipeline_stalls", 0),
+            "stalls_naive": s.get("pipeline_stalls_naive",
+                                  s.get("pipeline_stalls", 0)),
+            "stall_reduction": s.get("stall_reduction", 1.0),
+            "pipeline_depth": s.get("pipeline_depth", 2),
+        }
 
     def describe(self) -> Dict[str, Any]:
         c = self.compiled
@@ -219,8 +238,9 @@ class Program:
 class JaxProgram(Program):
     backend = "jax"
 
-    def __init__(self, cfg, batch, max_seq, step_cache=None):
-        super().__init__(cfg, batch, max_seq, step_cache)
+    def __init__(self, cfg, batch, max_seq, step_cache=None,
+                 pipeline_depth: int = 2):
+        super().__init__(cfg, batch, max_seq, step_cache, pipeline_depth)
         self._cache = None
         # donated slot zeroing: no full-cache copy per admission
         self._jreset = jax.jit(
@@ -274,7 +294,8 @@ class InterpreterProgram(Program):
 
     def __init__(self, cfg, batch, max_seq, step_cache=None, *,
                  options: Optional[CompileOptions] = None, tp: int = 1):
-        super().__init__(cfg, batch, max_seq, step_cache)
+        super().__init__(cfg, batch, max_seq, step_cache,
+                         options.pipeline_depth if options else 2)
         g = build_decode_graph(cfg, batch, max_seq, tp=tp)
         t0 = time.perf_counter()
         self._compiled = megakernelize(g, options)
@@ -327,14 +348,15 @@ class PallasProgram(Program):
 
     def __init__(self, cfg, batch, max_seq, step_cache=None, *,
                  max_rows: int = 8, latency_aware: bool = True,
-                 event_fusion: bool = True):
-        super().__init__(cfg, batch, max_seq, step_cache)
+                 event_fusion: bool = True, pipeline_depth: int = 2):
+        super().__init__(cfg, batch, max_seq, step_cache, pipeline_depth)
         # late import keeps the api package importable without pallas
         from ..kernels.megakernel import (MegakernelExecutor,
                                           compile_decode_megakernel)
         self.plan = compile_decode_megakernel(
             cfg, batch, max_seq, max_rows=max_rows,
-            latency_aware=latency_aware, event_fusion=event_fusion)
+            latency_aware=latency_aware, event_fusion=event_fusion,
+            pipeline_depth=pipeline_depth)
         self._compiled = self.plan.compiled
         self.executor = MegakernelExecutor(self.plan, cfg)
         self._smap = _state_map(cfg)
@@ -347,6 +369,18 @@ class PallasProgram(Program):
     @property
     def upload_count(self) -> int:
         return self.executor.upload_count
+
+    @property
+    def pipeline_stats(self) -> Dict[str, Any]:
+        """Compiler stats + the static prefetch plan (coverage over the
+        descriptor table) + — once a step has run — the kernel's own
+        per-step DMA counters (bulk tile DMAs vs the row copies they
+        batch, prefetch hits, demand-load misses)."""
+        out = dict(Program.pipeline_stats.fget(self))
+        out.update(self.plan.pipeline_stats())
+        if self.step_count > 0:
+            out.update(self.executor.pipeline_counters())
+        return out
 
     def bind(self, params) -> "Program":
         """Pack weights into the heap and upload it — exactly once."""
@@ -414,7 +448,8 @@ _BACKEND_CLASSES = {
 def compile(cfg, batch: int, max_seq: int, backend: str = "jax", *,
             step_cache: Optional[Dict[tuple, Callable]] = None,
             max_rows: Optional[int] = None, latency_aware: bool = True,
-            event_fusion: bool = True, tp: int = 1) -> Program:
+            event_fusion: bool = True, pipeline_depth: int = 2,
+            tp: int = 1) -> Program:
     """Compile ``cfg``'s decode step once; returns a stateful
     :class:`Program` for ``backend`` ("jax" | "interpreter" |
     "megakernel").
@@ -423,9 +458,11 @@ def compile(cfg, batch: int, max_seq: int, backend: str = "jax", *,
     the backend's native choice — 8 register-friendly rows for the
     megakernel, the decomposer default otherwise),
     ``latency_aware``/``event_fusion`` toggle the scheduler/fusion passes
-    (interpreter + megakernel), ``tp`` inserts AllReduce ops (interpreter
-    stats only).  ``step_cache`` shares (cfg, width)-keyed jitted prefill
-    steps across programs.
+    (interpreter + megakernel), ``pipeline_depth`` sets the scheduler's
+    producer→consumer separation target (2 = the megakernel's double
+    buffer; see ``Program.pipeline_stats``), ``tp`` inserts AllReduce ops
+    (interpreter stats only).  ``step_cache`` shares (cfg, width)-keyed
+    jitted prefill steps across programs.
     """
     if backend not in _BACKEND_CLASSES:
         raise ValueError(
@@ -436,7 +473,8 @@ def compile(cfg, batch: int, max_seq: int, backend: str = "jax", *,
         opts = CompileOptions(
             decompose=dec,
             latency_aware_schedule=latency_aware,
-            event_fusion=event_fusion)
+            event_fusion=event_fusion,
+            pipeline_depth=pipeline_depth)
         return InterpreterProgram(cfg, batch, max_seq, step_cache,
                                   options=opts, tp=tp)
     if tp != 1:
@@ -446,5 +484,7 @@ def compile(cfg, batch: int, max_seq: int, backend: str = "jax", *,
         return PallasProgram(cfg, batch, max_seq, step_cache,
                              max_rows=8 if max_rows is None else max_rows,
                              latency_aware=latency_aware,
-                             event_fusion=event_fusion)
-    return JaxProgram(cfg, batch, max_seq, step_cache)
+                             event_fusion=event_fusion,
+                             pipeline_depth=pipeline_depth)
+    return JaxProgram(cfg, batch, max_seq, step_cache,
+                      pipeline_depth=pipeline_depth)

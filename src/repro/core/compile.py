@@ -43,6 +43,9 @@ class CompileOptions:
     event_fusion: bool = True
     #: workspace alignment in elements
     workspace_align: int = 128
+    #: megakernel software-pipeline depth the scheduler separates
+    #: producer→consumer pairs by (2 = the kernel's double buffer)
+    pipeline_depth: int = 2
 
 
 @dataclasses.dataclass
@@ -277,7 +280,7 @@ def megakernelize(
     _add_start_final_events(tg)
     normalize(tg)
     if opts.latency_aware_schedule:
-        lin = latency_aware_linearize(tg)
+        lin = latency_aware_linearize(tg, opts.pipeline_depth)
     else:
         lin = linearize(tg)
 
@@ -285,7 +288,12 @@ def megakernelize(
 
     stats = dict(tg.stats)
     stats.pop("per_op_tasks", None)
-    stats["pipeline_stalls"] = count_pipeline_stalls(lin)
+    stats["pipeline_depth"] = opts.pipeline_depth
+    stats["pipeline_stalls"] = count_pipeline_stalls(lin, opts.pipeline_depth)
+    stats.setdefault("pipeline_stalls_naive", stats["pipeline_stalls"])
+    stats["stall_reduction"] = (
+        max(1, stats["pipeline_stalls_naive"])
+        / max(1, stats["pipeline_stalls"]))
     stats.update(overlap_statistics(lin))
     stats["workspace_elements"] = ws_size
     # the bump-allocator footprint (no reuse), for the shrink report

@@ -59,11 +59,23 @@ def linearize(
     tg: TGraph,
     event_priority: Optional[Callable[[TGraph, int], float]] = None,
     task_order: Optional[Callable[[TGraph, int], float]] = None,
+    event_selector: Optional[Callable] = None,
+    group_order: Optional[Callable] = None,
 ) -> LinearizedTGraph:
     """Algorithm 1.  ``event_priority`` orders the event queue ``E`` (lower
     first; default FIFO) and ``task_order`` orders tasks within one event's
     launch group — both leave the algorithm's guarantees intact because any
-    dequeue order of *ready* events yields a valid dependency order."""
+    dequeue order of *ready* events yields a valid dependency order.
+
+    ``event_selector(tg, candidates, order, index) -> entry`` replaces the
+    static priority queue with a *dynamic* choice over the ready set:
+    ``candidates`` is a list of ``(priority, seq, event_id)`` entries and
+    the returned entry is dequeued next.  ``group_order(tg, out_tasks,
+    order, index) -> list`` likewise replaces the static ``task_order``
+    sort within one event's launch group.  The scheduler uses both to
+    place each launch group — and each task within it — where it stalls
+    the megakernel pipeline least (the choice depends on what has already
+    been emitted, which a static priority cannot express)."""
     order: List[int] = []
     index: Dict[int, int] = {}
     event_ranges: Dict[int, Tuple[int, int, int]] = {}
@@ -81,7 +93,10 @@ def linearize(
             return
         enqueued[eid] = True
         prio = event_priority(tg, eid) if event_priority else float(seq)
-        heapq.heappush(heap, (prio, seq, eid))
+        if event_selector is not None:
+            heap.append((prio, seq, eid))
+        else:
+            heapq.heappush(heap, (prio, seq, eid))
         seq += 1
 
     # Line 2: enqueue all events with no dependent (triggering) tasks.
@@ -90,12 +105,21 @@ def linearize(
         push(eid)
 
     while heap:
-        _p, _s, eid = heapq.heappop(heap)
+        if event_selector is not None:
+            entry = event_selector(tg, heap, order, index)
+            heap.remove(entry)
+            _p, _s, eid = entry
+        else:
+            _p, _s, eid = heapq.heappop(heap)
         e = tg.events[eid]
-        out = sorted(
-            e.out_tasks,
-            key=(lambda t: (task_order(tg, t), t)) if task_order else (lambda t: t),
-        )
+        if group_order is not None:
+            out = group_order(tg, e.out_tasks, order, index)
+        else:
+            out = sorted(
+                e.out_tasks,
+                key=(lambda t: (task_order(tg, t), t)) if task_order
+                else (lambda t: t),
+            )
         first = len(order)
         for tid in out:  # lines 5-7: consecutive placement
             index[tid] = len(order)

@@ -38,12 +38,21 @@ class SimConfig:
     ici_bw: float = 50e9
     n_dma: int = 4                   # concurrent comm channels
     task_overhead: float = 0.1e-6    # dequeue + descriptor decode
+    compute_latency: float = 0.25e-6  # VPU/MXU issue-latency floor per task
     comm_latency: float = 2.0e-6     # per-collective base latency (hops)
     jit_hop: float = 0.6e-6          # worker->scheduler->worker (§5.2)
     aot_wait: float = 0.2e-6         # one event wait
     launch_overhead: float = 3.8e-6  # per-kernel launch (paper §6.6)
     mode: str = "mpk"                # kernel_per_op | mpk | mpk_coarse
     overlap_comm: bool = True
+    #: model cross-task software pipelining (paper §5 / Fig. 12): a task's
+    #: operand loads overlap the previous task's compute, so per-task time
+    #: is max(load, compute) instead of load + compute — EXCEPT for tasks
+    #: scheduled fewer than ``pipeline_depth`` steps after a producer,
+    #: whose prefetch the megakernel must demand-load (a pipeline stall).
+    #: ``pipelined=False`` is the per-row synchronous-copy baseline.
+    pipelined: bool = True
+    pipeline_depth: int = 2
 
 
 @dataclasses.dataclass
@@ -55,13 +64,23 @@ class SimResult:
     launches: int
 
 
-def _task_time(task, cfg: SimConfig) -> float:
+def _task_time(task, cfg: SimConfig, stalled: bool = False,
+               in_kernel: bool = True) -> float:
     if task.is_dummy:
         return 0.0
     if task.is_comm:
         return task.bytes_moved() / cfg.ici_bw + cfg.comm_latency
-    return max(task.flops() / cfg.worker_flops,
-               task.bytes_moved() / cfg.worker_bw) + cfg.task_overhead
+    load = task.bytes_moved() / cfg.worker_bw
+    comp = task.flops() / cfg.worker_flops + cfg.compute_latency
+    if cfg.pipelined and not stalled:
+        # operand loads hidden behind the previous task's compute; the
+        # dequeue+decode overhead is hidden too, but ONLY inside the
+        # persistent kernel (descriptor prefetch, paper §5.3) — per-op
+        # kernels pipeline their tiles internally yet still pay dispatch
+        core = max(load, comp)
+        return core if in_kernel else core + cfg.task_overhead
+    # serialized decode-then-load-then-compute (the per-row-copy kernel)
+    return load + comp + cfg.task_overhead
 
 
 def simulate(compiled: CompiledTGraph,
@@ -90,7 +109,7 @@ def simulate(compiled: CompiledTGraph,
                              else cfg.n_dma)
             for tid in tids:
                 i = lanes.index(min(lanes))
-                dt = _task_time(tg.tasks[tid], cfg)
+                dt = _task_time(tg.tasks[tid], cfg, in_kernel=False)
                 lanes[i] += dt
                 busy += dt
             t += max(lanes)
@@ -100,6 +119,16 @@ def simulate(compiled: CompiledTGraph,
                          len(per_op))
 
     # ---- event-driven in-kernel runtime ----
+    # pipeline stalls: producer→consumer pairs the linearized schedule
+    # placed closer than the pipeline depth lose their load/compute
+    # overlap (the prefetch plan demand-loads exactly these tiles)
+    stalled: set = set()
+    if cfg.pipelined:
+        pos = compiled.lin.index
+        for a, b in tg.task_dependencies():
+            if 0 < pos[b] - pos[a] < cfg.pipeline_depth:
+                stalled.add(b)
+
     # coarse mode: a task depends on ALL tasks of its producer operators
     deps_done: Dict[int, int] = {}
     dependents: Dict[int, List[int]] = {tid: [] for tid in tg.tasks}
@@ -141,7 +170,7 @@ def simulate(compiled: CompiledTGraph,
     while ready:
         avail, _s, tid = heapq.heappop(ready)
         task = tg.tasks[tid]
-        dt = _task_time(task, cfg)
+        dt = _task_time(task, cfg, tid in stalled)
         if task.is_comm and cfg.overlap_comm:
             lane = dma.index(min(dma))
             start = max(avail, dma[lane])

@@ -17,11 +17,37 @@ outputs alias their input state region (in-place update), exactly like the
 persistent kernel on real hardware; the SSA tGraph interpreter remains the
 copying oracle.
 
-Descriptor layout (int32 × 24) — field use per kind documented inline:
+Descriptor layout (int32 × 32) — field use per kind documented inline:
    0 kind   1 m      2 n      3 k      4 out_off 5 ldo
    6 a_off  7 lda    8 b_off  9 ldb   10 c_off  11 ldc
   12 d_off 13 ldd   14 act   15 aux0  16 aux1   17 fbits0
   18 fbits1 19 e_off 20 lde  21 aux2  22 aux3   23 aux4
+
+Words 24-31 are the compiler-emitted **prefetch plan** (§5 software
+pipelining) consumed by the kernel's double-buffered pipeline:
+
+  24 pf_off  25 pf_ld  26 pf_rows   task t+1's primary operand tile —
+     the kernel issues this as one bulk async DMA into the B side of the
+     ping-pong buffer while task t computes.  ``pf_rows == 0`` means no
+     prefetch (next task has no regular primary tile, or its tile
+     overlaps something this task writes — the hazard analysis below).
+  27 self_pf                        1 iff THIS task's primary tile was
+     prefetched by its predecessor (wait on the slot semaphore instead
+     of demand-loading).
+  28 sp_off  29 sp_ld  30 sp_rows   this task's own primary record (the
+     wait/demand-load reconstruction — the kernel never decodes two
+     descriptors per step).  Equal to the predecessor's words 24-26
+     whenever ``self_pf == 1`` (asserted at lowering).
+  31 reserved
+
+Every prefetch row copy is TN elements wide: row-slot padding
+(``ld >= cols + TN``) guarantees a TN-wide read from any legal element
+offset stays inside its own row slot, so one static width serves every
+task kind.
+
+The heap tail carries a ``STATS_WORDS``-sized DMA counter block (written
+by the kernel itself, read back via
+``MegakernelExecutor.pipeline_counters()``) at ``stats_offset``.
 """
 from __future__ import annotations
 
@@ -33,14 +59,19 @@ import numpy as np
 from ...core.compile import CompiledTGraph
 from ...core.graph import OpKind
 
-__all__ = ["KIND_CODES", "DESC_WORDS", "PER_STEP_INPUTS", "MegakernelPlan",
-           "MegakernelProgram", "lower_tgraph"]
+__all__ = ["KIND_CODES", "DESC_WORDS", "STATS_WORDS", "PER_STEP_INPUTS",
+           "MegakernelPlan", "MegakernelProgram", "lower_tgraph"]
 
 #: graph inputs that change every decode step — everything else in the heap
 #: (weights, caches, SSM/conv state) is uploaded once and lives on device
 PER_STEP_INPUTS = ("tokens", "h0", "positions", "seq_lens", "live_lens")
 
-DESC_WORDS = 24
+DESC_WORDS = 32
+
+#: f32 words reserved at the heap tail for the kernel-maintained DMA
+#: counters: [0] bulk tile DMAs, [1] row copies inside them, [2] prefetch
+#: tiles issued, [3] primary tiles demand-loaded (pipeline misses)
+STATS_WORDS = 8
 
 KIND_CODES = {
     "noop": 0,
@@ -105,6 +136,29 @@ class MegakernelPlan:
     layout: Dict[str, TensorSlot]
     heap_size: int
     statics: Dict[str, Any]           # compile-time kernel parameters
+    #: heap offset of the kernel-maintained DMA counter block
+    stats_offset: int = 0
+
+    # ------------------------------------------------- pipeline contract
+    def pipeline_stats(self) -> Dict[str, Any]:
+        """The static half of the schedule→kernel pipeline contract:
+        scheduler stalls plus the prefetch plan's coverage over the
+        descriptor table (the dynamic half — actual bulk-DMA counts — is
+        ``MegakernelExecutor.pipeline_counters()``)."""
+        s = self.compiled.stats
+        kinds = self.descs[:, 0]
+        prefetchable = int(np.isin(kinds, list(_PRIMARY_ROWS_M)
+                                   + [KIND_CODES[OpKind.EMBED_LOOKUP]]).sum())
+        prefetched = int((self.descs[:, 27] == 1).sum())
+        return {
+            "stalls": s.get("pipeline_stalls", 0),
+            "stalls_naive": s.get("pipeline_stalls_naive",
+                                  s.get("pipeline_stalls", 0)),
+            "pipeline_depth": s.get("pipeline_depth", 2),
+            "prefetchable_tasks": prefetchable,
+            "prefetched_tasks": prefetched,
+            "prefetch_coverage": prefetched / max(1, prefetchable),
+        }
 
     # ---------------------------------------------------- input classes
     def input_classes(self) -> Dict[str, List[str]]:
@@ -148,6 +202,95 @@ class MegakernelPlan:
 #: deprecated name — the plan/executor split renamed the static half;
 #: ``ops.MegakernelExecutor`` is the live half
 MegakernelProgram = MegakernelPlan
+
+
+#: kinds whose leading operand is a regular (m-row, descriptor-addressed)
+#: tile the double-buffered pipeline can prefetch: code -> index of that
+#: operand in ``op.inputs`` (the hazard analysis needs its tensor slot).
+#: EMBED_LOOKUP is special-cased (a single token-id row); MOE_COMBINE and
+#: noop have no regular primary tile.
+_PRIMARY_ROWS_M = {
+    KIND_CODES[OpKind.MATMUL]: 0,
+    KIND_CODES[OpKind.RMSNORM]: 0,
+    KIND_CODES[OpKind.ROPE]: 0,
+    KIND_CODES[OpKind.GLU_MUL]: 0,
+    KIND_CODES[OpKind.RESIDUAL_ADD]: 0,      # ELEMENTWISE shares code 5
+    KIND_CODES[OpKind.ATTENTION_DECODE]: 0,
+    KIND_CODES[OpKind.CACHE_UPDATE]: 1,      # the new K/V rows, not cache
+    KIND_CODES[OpKind.SOFTMAX_TOPK]: 0,
+    KIND_CODES[OpKind.MOE_GATHER_GEMM]: 0,
+    KIND_CODES[OpKind.SSM_UPDATE]: 0,
+    KIND_CODES[OpKind.CONV1D_UPDATE]: 0,
+}
+
+
+def _primary_record(d: np.ndarray):
+    """(off, ld, rows) of a descriptor's primary operand tile, or None."""
+    code = int(d[0])
+    if code == KIND_CODES[OpKind.EMBED_LOOKUP]:
+        return int(d[6]), 1, 1
+    if code in _PRIMARY_ROWS_M:
+        return int(d[6]), max(1, int(d[7])), int(d[1])
+    return None
+
+
+def _plan_prefetch(compiled: CompiledTGraph, layout: Dict[str, TensorSlot],
+                   descs: np.ndarray) -> None:
+    """Emit the per-task prefetch plan (descriptor words 24-31).
+
+    Task t's words 24-26 describe task t+1's primary operand tile iff that
+    tile cannot be clobbered by anything task t writes — the prefetch DMA
+    is issued *before* task t's stores land (true async semantics, in
+    interpret mode too), so the source slot must be disjoint from every
+    output slot of task t.  Slot-interval granularity is conservative but
+    exact under aliasing: layout resolves in-place state outputs to their
+    root slots, and both tile reads and tile writes are contained in
+    their tensor's slot by the row-padding invariant.
+    """
+    g = compiled.graph
+    tg = compiled.tg
+
+    def slot_iv(name: str):
+        s = layout[name]
+        return s.offset, s.offset + s.rows * s.ld
+
+    prim_iv = []     # per position: slot interval of the primary operand
+    out_ivs = []     # per position: slot intervals of everything written
+    for pos, tid in enumerate(compiled.order):
+        task = tg.tasks[tid]
+        if task.is_dummy:
+            prim_iv.append(None)
+            out_ivs.append([])
+            continue
+        op = g.op(task.op_id)
+        code = int(descs[pos, 0])
+        if code == KIND_CODES[OpKind.EMBED_LOOKUP]:
+            prim_iv.append(slot_iv(op.inputs[0]))
+        elif code in _PRIMARY_ROWS_M:
+            prim_iv.append(slot_iv(op.inputs[_PRIMARY_ROWS_M[code]]))
+        else:
+            prim_iv.append(None)
+        out_ivs.append([slot_iv(name) for name in task.out_regions])
+
+    n = len(compiled.order)
+    for pos in range(n):
+        rec = _primary_record(descs[pos])
+        if rec is not None:
+            descs[pos, 28:31] = rec
+    for pos in range(n - 1):
+        rec = _primary_record(descs[pos + 1])
+        if rec is None:
+            continue
+        lo, hi = prim_iv[pos + 1]
+        if any(wlo < hi and lo < whi for wlo, whi in out_ivs[pos]):
+            continue                       # hazard: demand-load instead
+        descs[pos, 24:27] = rec
+        descs[pos + 1, 27] = 1
+    # the kernel reconstructs the prefetch copies from the consumer's own
+    # words 28-30 to wait on them — both sides must agree exactly
+    for pos in range(1, n):
+        if descs[pos, 27] == 1:
+            assert (descs[pos - 1, 24:27] == descs[pos, 28:31]).all(), pos
 
 
 #: outputs that alias an input region (in-place state update)
@@ -397,4 +540,11 @@ def lower_tgraph(compiled: CompiledTGraph, cfg,
         if mask.any():
             k_max = max(k_max, int(descs[mask, 3].max(initial=1)))
     statics["TK"] = _align(max(statics["TK"], k_max))
-    return MegakernelPlan(compiled, descs, layout, heap_size, statics)
+
+    # ---- prefetch plan (words 24-31) + kernel DMA-counter block ----
+    _plan_prefetch(compiled, layout, descs)
+    stats_offset = heap_size
+    statics["STATS_OFF"] = stats_offset
+    heap_size += STATS_WORDS
+    return MegakernelPlan(compiled, descs, layout, heap_size, statics,
+                          stats_offset)

@@ -4,17 +4,40 @@ compiled tGraph as a stream of tasks.
 TPU adaptation of MPK's in-kernel runtime (paper §5): the 1-D grid *is*
 the linearized task list (grid order = execution schedule = Algorithm 1's
 output); task descriptors are scalar-prefetched into SMEM (§5.3 descriptor
-prefetch); every operand tile is DMA'd HBM→VMEM on demand (the paged
-shared-memory analogue — fixed VMEM scratch buffers play the role of
-pages, acquired per task and reused across tasks); state updates
-(KV-cache / conv / SSM) write in place through buffer aliasing.  Task
-dispatch is a ``lax.switch`` over the task-kind word — the task library
-below is the §4.2 per-task device-function set.
+prefetch); operand tiles are DMA'd HBM→VMEM as *bulk strided tiles* (one
+logical DMA per tile — issued as back-to-back row copies against one
+semaphore, which a real TPU DMA engine expresses as a single strided
+descriptor); state updates (KV-cache / conv / SSM) write in place through
+buffer aliasing.  Task dispatch is a ``lax.switch`` over the task-kind
+word — the task library below is the §4.2 per-task device-function set.
+
+Cross-task software pipelining (paper §5, Fig. 12): every grid step runs
+two phases against a double-buffered primary-operand tile ``sP`` of shape
+(2, TM, TN):
+
+* **prefetch phase** — issue async loads for task t+1's primary operand
+  tile (descriptor words 24-26, emitted by the compiler's prefetch plan in
+  ``desc.py``) into the B side ``sP[(t+1) % 2]``, tracked by the per-slot
+  DMA semaphore ``psem[(t+1) % 2]``; the copies overlap task t's compute.
+* **compute phase** — wait on ``psem[t % 2]`` and consume the A side
+  ``sP[t % 2]`` (words 27-30 carry the task's own primary record so the
+  kernel never decodes two descriptors per step).  Tasks whose operand
+  could not be prefetched (hazard with the previous task's writes, or the
+  first task) demand-load the tile instead.
+
+Interpret mode copies at ``start()`` (verified), so the prefetch genuinely
+reads memory *before* the previous task's stores land — the compiler's
+hazard analysis is load-bearing and is exercised by the bitwise parity
+suite, exactly as on hardware.
+
+A DMA counter block (8 f32 words at ``statics["STATS_OFF"]`` in the heap)
+is maintained by the kernel itself: [0] bulk tile DMAs issued, [1] row
+copies inside them (what the pre-pipelining kernel issued as individual
+DMAs), [2] prefetch tiles issued, [3] primary tiles demand-loaded.
+``MegakernelExecutor.pipeline_counters()`` reads it back.
 
 Validated in interpret mode against the numpy tGraph interpreter and the
-JAX model oracle (tests/test_megakernel.py).  On real TPU hardware the
-same structure lowers with multi-buffered DMA; cross-core communication
-tasks become remote DMAs + semaphores (see DESIGN.md §2).
+JAX model oracle (tests/test_megakernel.py, tests/test_program_api.py).
 """
 from __future__ import annotations
 
@@ -27,7 +50,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from .desc import DESC_WORDS
+from .desc import DESC_WORDS, STATS_WORDS
 
 __all__ = ["make_megakernel", "make_count"]
 
@@ -75,48 +98,227 @@ def make_megakernel(statics: Dict[str, Any], num_tasks: int,
     WC = max(1, statics["W_CONV"])
     TOPK = max(1, statics["TOPK"])
     EMAX = max(1, statics.get("E_MAX", 1))
+    STATS_OFF = statics["STATS_OFF"]
     SB_ROWS = max(TKC, TS, HDS, WC, 8)
     TNK = max(TN, TKC)
 
-    def kernel(desc, heap_in, heap, sA, sB, sC, sD, acc, acc2, sem):
+    def kernel(desc, heap_in, heap, sA, sB, sC, sD, acc, acc2, sP, cnt,
+               sem, psem):
         t = pl.program_id(0)
         d = lambda i: desc[t, i]
+        slot = jax.lax.rem(t, 2)            # A side: this task's operands
+        nslot = jax.lax.rem(t + 1, 2)       # B side: prefetch target
+
+        @pl.when(t == 0)
+        def _():
+            cnt[0, :] = jnp.zeros((STATS_WORDS,), jnp.float32)
+
+        def _count(nrows):
+            """One bulk tile DMA moving ``nrows`` strided rows.  The row
+            total spills into a 2^20-unit high word so the f32 counters
+            stay exact far past 2^24 rows/launch (full-size models)."""
+            cnt[0, 0] += 1.0
+            cnt[0, 1] += jnp.asarray(nrows).astype(jnp.float32)
+
+            @pl.when(cnt[0, 1] >= 1048576.0)
+            def _():
+                cnt[0, 4] += 1.0
+                cnt[0, 1] -= 1048576.0
 
         # ---------------- DMA helpers (all through the aliased out ref) ---
-        def load_rows(dst, base, ld, nrows, max_rows, width):
-            """dst[i, :width] = heap[base + i*ld : +width], zero if i>=nrows."""
-            def body(i, _):
+        def load_tile(dst, base, ld, nrows, max_rows, width):
+            """dst[i, :width] = heap[base + i*ld : +width], zero if i>=nrows.
+
+            ONE bulk strided DMA: every row copy is issued back-to-back
+            (start), then completion is awaited once — a real TPU DMA
+            engine expresses this as a single strided descriptor; only
+            interpret mode's 1-D heap ref forces the per-row expansion."""
+            nrows = jnp.asarray(nrows, jnp.int32)
+
+            @pl.when(nrows > 0)
+            def _():
+                _count(nrows)
+
+            def start_body(i, _):
                 @pl.when(i < nrows)
                 def _():
-                    cp = pltpu.make_async_copy(
+                    pltpu.make_async_copy(
                         heap.at[pl.ds(base + i * ld, width)],
-                        dst.at[i, pl.ds(0, width)], sem)
-                    cp.start()
-                    cp.wait()
+                        dst.at[i, pl.ds(0, width)], sem).start()
+                return 0
+            jax.lax.fori_loop(0, max_rows, start_body, 0)
+
+            def fin_body(i, _):
+                @pl.when(i < nrows)
+                def _():
+                    pltpu.make_async_copy(
+                        heap.at[pl.ds(base + i * ld, width)],
+                        dst.at[i, pl.ds(0, width)], sem).wait()
                 @pl.when(jnp.logical_not(i < nrows))
                 def _():
-                    dst[i, pl.ds(0, width)] = jnp.zeros((width,), jnp.float32)
+                    dst[i, pl.ds(0, width)] = jnp.zeros((width,),
+                                                        jnp.float32)
                 return 0
-            jax.lax.fori_loop(0, max_rows, body, 0)
+            jax.lax.fori_loop(0, max_rows, fin_body, 0)
 
-        def store_rows(src, base, ld, nrows, max_rows, width):
-            def body(i, _):
+        def store_tile(src, base, ld, nrows, max_rows, width):
+            """Bulk strided write-back: issue all row copies, wait once."""
+            nrows = jnp.asarray(nrows, jnp.int32)
+
+            @pl.when(nrows > 0)
+            def _():
+                _count(nrows)
+
+            def start_body(i, _):
                 @pl.when(i < nrows)
                 def _():
-                    cp = pltpu.make_async_copy(
+                    pltpu.make_async_copy(
                         src.at[i, pl.ds(0, width)],
-                        heap.at[pl.ds(base + i * ld, width)], sem)
-                    cp.start()
-                    cp.wait()
+                        heap.at[pl.ds(base + i * ld, width)], sem).start()
                 return 0
-            jax.lax.fori_loop(0, max_rows, body, 0)
+            jax.lax.fori_loop(0, max_rows, start_body, 0)
+
+            def fin_body(i, _):
+                @pl.when(i < nrows)
+                def _():
+                    pltpu.make_async_copy(
+                        src.at[i, pl.ds(0, width)],
+                        heap.at[pl.ds(base + i * ld, width)], sem).wait()
+                return 0
+            jax.lax.fori_loop(0, max_rows, fin_body, 0)
+
+        def load_row(dst, row, base, width):
+            """Single contiguous row: heap[base:+width] -> dst[row]."""
+            _count(1)
+            cp = pltpu.make_async_copy(
+                heap.at[pl.ds(base, width)],
+                dst.at[row, pl.ds(0, width)], sem)
+            cp.start()
+            cp.wait()
+
+        def load_col(row, base, stride, nelems, max_elems):
+            """Strided element gather (one bulk DMA of ``nelems`` width-1
+            rows): sC[row, i] = heap[base + i*stride], zero if i>=nelems."""
+            nelems = jnp.asarray(nelems, jnp.int32)
+
+            @pl.when(nelems > 0)
+            def _():
+                _count(nelems)
+
+            def body(i, _):
+                @pl.when(i < nelems)
+                def _():
+                    pltpu.make_async_copy(
+                        heap.at[pl.ds(base + i * stride, 1)],
+                        sC.at[row, pl.ds(i, 1)], sem).start()
+                return 0
+            jax.lax.fori_loop(0, max_elems, body, 0)
+
+            def fin(i, _):
+                @pl.when(i < nelems)
+                def _():
+                    pltpu.make_async_copy(
+                        heap.at[pl.ds(base + i * stride, 1)],
+                        sC.at[row, pl.ds(i, 1)], sem).wait()
+                @pl.when(jnp.logical_not(i < nelems))
+                def _():
+                    sC[row, pl.ds(i, 1)] = jnp.zeros((1,), jnp.float32)
+                return 0
+            jax.lax.fori_loop(0, max_elems, fin, 0)
 
         def store_row_vec(vec_2d, row, base, width):
+            _count(1)
             cp = pltpu.make_async_copy(
                 vec_2d.at[row, pl.ds(0, width)],
                 heap.at[pl.ds(base, width)], sem)
             cp.start()
             cp.wait()
+
+        def store_primary_row(r, base):
+            """Write one row of the primary tile back to the heap (the
+            cache-update path stores prefetched K/V rows directly)."""
+            _count(1)
+            cp = pltpu.make_async_copy(
+                sP.at[slot, r, pl.ds(0, TN)],
+                heap.at[pl.ds(base, TN)], sem)
+            cp.start()
+            cp.wait()
+
+        # ------------------------------------------------ prefetch phase
+        # Issue task t+1's primary operand tile into the B side.  The
+        # compiler emitted (off, ld, rows) at words 24-26 only when the
+        # tile does not overlap anything task t writes, so reading before
+        # this task's stores land is safe (that is the hazard analysis).
+        pf_rows = d(26)
+
+        @pl.when(pf_rows > 0)
+        def _():
+            _count(pf_rows)
+            cnt[0, 2] += 1.0
+
+        def pf_body(i, _):
+            @pl.when(i < pf_rows)
+            def _():
+                pltpu.make_async_copy(
+                    heap.at[pl.ds(d(24) + i * d(25), TN)],
+                    sP.at[nslot, i, pl.ds(0, TN)],
+                    psem.at[nslot]).start()
+            return 0
+        jax.lax.fori_loop(0, TM, pf_body, 0)
+
+        # ------------------------------------------------- compute phase
+        def primary():
+            """This task's primary operand tile as a (TM, TN) value:
+            either the A side filled by the previous step's prefetch
+            (wait on the per-slot semaphore), or a demand bulk load when
+            no prefetch was possible.  Rows >= sp_rows are zeroed."""
+            rows = d(30)
+
+            @pl.when(d(27) == 1)
+            def _():                     # prefetched at step t-1
+                def wbody(i, _):
+                    @pl.when(i < rows)
+                    def _():
+                        pltpu.make_async_copy(
+                            heap.at[pl.ds(d(28) + i * d(29), TN)],
+                            sP.at[slot, i, pl.ds(0, TN)],
+                            psem.at[slot]).wait()
+                    return 0
+                jax.lax.fori_loop(0, TM, wbody, 0)
+
+            @pl.when(jnp.logical_and(d(27) == 0, rows > 0))
+            def _():                     # hazard or first task: demand load
+                _count(rows)
+                cnt[0, 3] += 1.0
+
+                def sbody(i, _):
+                    @pl.when(i < rows)
+                    def _():
+                        pltpu.make_async_copy(
+                            heap.at[pl.ds(d(28) + i * d(29), TN)],
+                            sP.at[slot, i, pl.ds(0, TN)],
+                            psem.at[slot]).start()
+                    return 0
+                jax.lax.fori_loop(0, TM, sbody, 0)
+
+                def fbody(i, _):
+                    @pl.when(i < rows)
+                    def _():
+                        pltpu.make_async_copy(
+                            heap.at[pl.ds(d(28) + i * d(29), TN)],
+                            sP.at[slot, i, pl.ds(0, TN)],
+                            psem.at[slot]).wait()
+                    return 0
+                jax.lax.fori_loop(0, TM, fbody, 0)
+
+            def zbody(i, _):
+                @pl.when(i >= rows)
+                def _():
+                    sP[pl.ds(slot, 1), pl.ds(i, 1), :] = jnp.zeros(
+                        (1, 1, TN), jnp.float32)
+                return 0
+            jax.lax.fori_loop(0, TM, zbody, 0)
+            return sP[pl.ds(slot, 1)][0]
 
         cols = jax.lax.iota(jnp.int32, TN)
 
@@ -126,33 +328,38 @@ def make_megakernel(statics: Dict[str, Any], num_tasks: int,
 
         def k_matmul():
             m, n, k = d(1), d(2), d(3)
+            pa = primary()
             acc[...] = jnp.zeros((TM, TN), jnp.float32)
             for kc in range(KCH):
                 k0 = kc * TKC
-                load_rows(sA, d(6) + k0, d(7), m, TM, TKC)
-                load_rows(sB, d(8) + k0 * d(9), d(9),
+                if kc == 0:
+                    xa = pa[:, :TKC]
+                else:
+                    load_tile(sA, d(6) + k0, d(7), m, TM, TKC)
+                    xa = sA[:, :TKC]
+                load_tile(sB, d(8) + k0 * d(9), d(9),
                           jnp.clip(k - k0, 0, TKC), SB_ROWS, TN)
                 acc[...] += jax.lax.dot_general(
-                    sA[:, :TKC], sB[:TKC, :],
+                    xa, sB[:TKC, :],
                     (((1,), (0,)), ((), ())),
                     preferred_element_type=jnp.float32)
             y = acc[...]
             @pl.when(d(10) >= 0)
             def _():
-                load_rows(sC, d(10), 1, 1, 1, TN)
+                load_row(sC, 0, d(10), TN)
             @pl.when(d(10) < 0)
             def _():
                 sC[0, :] = jnp.zeros((TN,), jnp.float32)
             y = y + sC[0, :][None, :]
             y = _act(y, d(14))
             acc[...] = y
-            store_rows(acc, d(4), d(5), m, TM, TN)
+            store_tile(acc, d(4), d(5), m, TM, TN)
 
         def k_rmsnorm():
             m, n = d(1), d(2)
-            load_rows(sA, d(6), d(7), m, TM, TN)
-            load_rows(sC, d(10), 1, 1, 1, TN)
-            x = sA[:, :TN]
+            pa = primary()
+            load_row(sC, 0, d(10), TN)
+            x = pa[:, :TN]
             mean = jnp.sum(x * x, axis=1, keepdims=True) / n.astype(jnp.float32)
             inv = jax.lax.rsqrt(mean + _f32(d(17)))
             w = sC[0, :][None, :]
@@ -161,17 +368,17 @@ def make_megakernel(statics: Dict[str, Any], num_tasks: int,
             # keep pad columns zero (gemma's 1+w would leak 1·0=0 anyway)
             y = jnp.where(cols[None, :] < n, y, 0.0)
             acc[...] = y
-            store_rows(acc, d(4), d(5), m, TM, TN)
+            store_tile(acc, d(4), d(5), m, TM, TN)
 
         def k_rope():
             m, n = d(1), d(2)
-            load_rows(sA, d(6), d(7), m, TM, TN)
+            pa = primary()
             half = HD // 2
             inv_freq = THETA ** (-jnp.arange(0, half, dtype=jnp.float32)
                                  / half)
             is_mrope = d(15) == 1
             pw = 4 if MROPE else 1
-            load_rows(sC, d(19), d(20), m, TM, pw)
+            load_tile(sC, d(19), d(20), m, TM, pw)
             if MROPE:
                 ang_parts = []
                 start = 0
@@ -183,7 +390,7 @@ def make_megakernel(statics: Dict[str, Any], num_tasks: int,
             else:
                 ang = sC[:TM, 0][:, None] * inv_freq[None, :]
             cosv, sinv = jnp.cos(ang), jnp.sin(ang)
-            y = sA[:, :TN]
+            y = pa[:, :TN]
             out = jnp.zeros((TM, TN), jnp.float32)
             for h in range(TN // HD):
                 x1 = y[:, h * HD : h * HD + half]
@@ -192,40 +399,40 @@ def make_megakernel(statics: Dict[str, Any], num_tasks: int,
                     [x1 * cosv - x2 * sinv, x2 * cosv + x1 * sinv], axis=1)
                 out = jax.lax.dynamic_update_slice(out, rot, (0, h * HD))
             acc[...] = out
-            store_rows(acc, d(4), d(5), m, TM, TN)
+            store_tile(acc, d(4), d(5), m, TM, TN)
 
         def k_glu():
             m = d(1)
-            load_rows(sA, d(6), d(7), m, TM, TN)
-            load_rows(sD, d(8), d(9), m, TM, TN)
-            acc[...] = _act(sA[:, :TN], d(14)) * sD[:TM, :TN]
-            store_rows(acc, d(4), d(5), m, TM, TN)
+            pa = primary()
+            load_tile(sD, d(8), d(9), m, TM, TN)
+            acc[...] = _act(pa[:, :TN], d(14)) * sD[:TM, :TN]
+            store_tile(acc, d(4), d(5), m, TM, TN)
 
         def k_resid():
             m = d(1)
-            load_rows(sA, d(6), d(7), m, TM, TN)
-            y = sA[:, :TN] * _f32(d(17))
+            pa = primary()
+            y = pa[:, :TN] * _f32(d(17))
             @pl.when(d(8) >= 0)
             def _():
-                load_rows(sD, d(8), d(9), m, TM, TN)
+                load_tile(sD, d(8), d(9), m, TM, TN)
             @pl.when(d(8) < 0)
             def _():
                 sD[:TM, :] = jnp.zeros((TM, TN), jnp.float32)
             acc[...] = y + sD[:TM, :TN]
-            store_rows(acc, d(4), d(5), m, TM, TN)
+            store_tile(acc, d(4), d(5), m, TM, TN)
 
         def k_attn():
             m, n, s_len = d(1), d(2), d(3)
             scale = _f32(d(17))
-            load_rows(sA, d(6), d(7), m, TM, TN)           # q tile
-            load_rows(sC, d(12), 1, 1, 1, TM)              # live lens row
+            pa = primary()                                 # q tile
+            load_row(sC, 0, d(12), TM)                     # live lens row
             for r in range(TM):
                 @pl.when(r < m)
                 def _(r=r):
                     live = sC[0, r].astype(jnp.int32)
                     row_out = jnp.zeros((TN,), jnp.float32)
                     for gi in range(NG):
-                        qg = sA[r, gi * G * HD : (gi + 1) * G * HD]
+                        qg = pa[r, gi * G * HD : (gi + 1) * G * HD]
                         qm = qg.reshape(G, HD) * scale
                         mrun = jnp.full((G,), -1e30, jnp.float32)
                         lrun = jnp.zeros((G,), jnp.float32)
@@ -233,9 +440,9 @@ def make_megakernel(statics: Dict[str, Any], num_tasks: int,
                         for sc in range(SCH):
                             s0 = sc * TS
                             valid = jnp.clip(live - s0, 0, TS)
-                            load_rows(sB, d(8) + r * d(15) + gi * HD
+                            load_tile(sB, d(8) + r * d(15) + gi * HD
                                       + s0 * d(9), d(9), valid, TS, HD)
-                            load_rows(sD, d(10) + r * d(15) + gi * HD
+                            load_tile(sD, d(10) + r * d(15) + gi * HD
                                       + s0 * d(11), d(11), valid, TS, HD)
                             logits = jax.lax.dot_general(
                                 sB[:TS, :HD], qm,
@@ -263,32 +470,28 @@ def make_megakernel(statics: Dict[str, Any], num_tasks: int,
 
         def k_cache_update():
             m = d(1)
-            load_rows(sA, d(6), d(7), m, TM, TN)           # new K/V rows
-            load_rows(sC, d(12), 1, 1, 1, TM)              # seq lens
+            primary()                                      # new K/V rows
+            load_row(sC, 0, d(12), TM)                     # seq lens
             for r in range(TM):
                 @pl.when(r < m)
                 def _(r=r):
                     seq = sC[0, r].astype(jnp.int32)
-                    store_row_vec(sA, r, d(4) + r * d(15) + seq * d(5), TN)
+                    store_primary_row(r, d(4) + r * d(15) + seq * d(5))
 
         def k_embed():
             m = d(1)
-            load_rows(sC, d(6), 1, 1, 1, TM)               # token ids (f32)
+            ids = primary()                                # token ids (f32)
             for r in range(TM):
                 @pl.when(r < m)
                 def _(r=r):
-                    tok = sC[0, r].astype(jnp.int32)
-                    cp = pltpu.make_async_copy(
-                        heap.at[pl.ds(d(8) + tok * d(9), TN)],
-                        sA.at[r, pl.ds(0, TN)], sem)
-                    cp.start()
-                    cp.wait()
+                    tok = ids[0, r].astype(jnp.int32)
+                    load_row(sA, r, d(8) + tok * d(9), TN)
                     store_row_vec(sA, r, d(4) + r * d(5), TN)
 
         def k_softmax_topk():
             m, n = d(1), d(2)
-            load_rows(sA, d(6), d(7), m, TM, TN)
-            masked = jnp.where(cols[None, :] < n, sA[:, :TN], -jnp.inf)
+            pa = primary()
+            masked = jnp.where(cols[None, :] < n, pa[:, :TN], -jnp.inf)
             sel = jnp.zeros((TM, TN, TOPK), jnp.float32)
             vals = jnp.zeros((TM, TOPK), jnp.float32)
             for i in range(TOPK):
@@ -301,39 +504,31 @@ def make_megakernel(statics: Dict[str, Any], num_tasks: int,
             w = jax.nn.softmax(vals, axis=1)                  # (TM, K)
             out = jnp.einsum("mek,mk->me", sel, w)
             acc[...] = out
-            store_rows(acc, d(4), d(5), m, TM, TN)
+            store_tile(acc, d(4), d(5), m, TM, TN)
 
         def k_moe_gg():
             m, n, k = d(1), d(2), d(3)
+            pa = primary()
             # router column for this expert -> per-token mask
-            def rbody(i, _):
-                @pl.when(i < m)
-                def _():
-                    cp = pltpu.make_async_copy(
-                        heap.at[pl.ds(d(10) + i * d(11), 1)],
-                        sC.at[1, pl.ds(i, 1)], sem)
-                    cp.start()
-                    cp.wait()
-                @pl.when(jnp.logical_not(i < m))
-                def _():
-                    sC[1, pl.ds(i, 1)] = jnp.zeros((1,), jnp.float32)
-                return 0
-            jax.lax.fori_loop(0, TM, rbody, 0)
+            load_col(1, d(10), d(11), m, TM)
             mask = (sC[1, :TM] > 0).astype(jnp.float32)[:, None]
             acc[...] = jnp.zeros((TM, TN), jnp.float32)
             acc2[...] = jnp.zeros((TM, TN), jnp.float32)
             for kc in range(KCH):
                 k0 = kc * TKC
-                load_rows(sA, d(6) + k0, d(7), m, TM, TKC)
-                xa = sA[:, :TKC] * mask
-                load_rows(sB, d(8) + k0 * d(9), d(9),
+                if kc == 0:
+                    xa = pa[:, :TKC] * mask
+                else:
+                    load_tile(sA, d(6) + k0, d(7), m, TM, TKC)
+                    xa = sA[:, :TKC] * mask
+                load_tile(sB, d(8) + k0 * d(9), d(9),
                           jnp.clip(k - k0, 0, TKC), SB_ROWS, TN)
                 acc[...] += jax.lax.dot_general(
                     xa, sB[:TKC, :], (((1,), (0,)), ((), ())),
                     preferred_element_type=jnp.float32)
                 @pl.when(d(15) == 1)
                 def _():
-                    load_rows(sB, d(19) + k0 * d(9), d(9),
+                    load_tile(sB, d(19) + k0 * d(9), d(9),
                               jnp.clip(k - k0, 0, TKC), SB_ROWS, TN)
                     acc2[...] += jax.lax.dot_general(
                         xa, sB[:TKC, :], (((1,), (0,)), ((), ())),
@@ -342,64 +537,53 @@ def make_megakernel(statics: Dict[str, Any], num_tasks: int,
                           _act(acc[...], d(14)) * acc2[...],
                           acc[...])
             acc[...] = y
-            store_rows(acc, d(4), d(5), m, TM, TN)
+            store_tile(acc, d(4), d(5), m, TM, TN)
 
         def k_moe_combine():
             m, n, n_exp = d(1), d(2), d(3)
             acc[...] = jnp.zeros((TM, TN), jnp.float32)
             for e in range(EMAX):
                 live = (e < n_exp)
-                load_rows(sD, d(6) + e * d(15), d(7),
+                load_tile(sD, d(6) + e * d(15), d(7),
                           jnp.where(live, m, 0), TM, TN)
-                def rbody(i, _):
-                    @pl.when(jnp.logical_and(i < m, live))
-                    def _():
-                        cp = pltpu.make_async_copy(
-                            heap.at[pl.ds(d(10) + i * d(11) + e, 1)],
-                            sC.at[1, pl.ds(i, 1)], sem)
-                        cp.start()
-                        cp.wait()
-                    @pl.when(jnp.logical_not(jnp.logical_and(i < m, live)))
-                    def _():
-                        sC[1, pl.ds(i, 1)] = jnp.zeros((1,), jnp.float32)
-                    return 0
-                jax.lax.fori_loop(0, TM, rbody, 0)
+                load_col(1, d(10) + e, d(11),
+                         jnp.where(live, m, 0), TM)
                 acc[...] += sD[:TM, :TN] * sC[1, :TM][:, None]
-            store_rows(acc, d(4), d(5), m, TM, TN)
+            store_tile(acc, d(4), d(5), m, TM, TN)
 
         def k_ssm():
             m = d(1)
-            load_rows(sA, d(6), d(7), m, TM, TN)           # x tile
-            load_rows(sC, d(12), 1, 1, 1, TN)              # A_log (head slc)
-            a_log = sC[0, :]
+            pa = primary()                                 # x tile
+            load_row(sC, 2, d(12), TN)                     # A_log, loaded ONCE
+            a_log = sC[2, :]
             @pl.when(d(23) >= 0)
             def _():
-                load_rows(sC, d(23), 1, 1, 1, TN)
-            dsk = jnp.where(d(23) >= 0, sC[0, :], 0.0)
-            # reload A_log into row 2 (sC[0] now holds D_skip)
-            load_rows(sC, d(12), 1, 1, 1, TN)
-            a_log = sC[0, :]
+                load_row(sC, 3, d(23), TN)                 # D skip (own row)
+            @pl.when(d(23) < 0)
+            def _():
+                sC[3, :] = jnp.zeros((TN,), jnp.float32)
+            dsk = jnp.where(d(23) >= 0, sC[3, :], 0.0)
             for r in range(TM):
                 @pl.when(r < m)
                 def _(r=r):
-                    load_rows(sC, d(10) + r * d(11), 1, 1, 1, TN)
+                    load_row(sC, 0, d(10) + r * d(11), TN)
                     dt_row = sC[0, :]                       # dt (head slice)
-                    load_rows(sC, d(19) + r * d(20), 1, 1, 1, TN)
+                    load_row(sC, 0, d(19) + r * d(20), TN)
                     bvec = sC[0, :NS]
-                    load_rows(sC, d(21) + r * d(22), 1, 1, 1, TN)
+                    load_row(sC, 0, d(21) + r * d(22), TN)
                     cvec = sC[0, :NS]
                     row_out = jnp.zeros((TN,), jnp.float32)
                     for hh in range(NHT):
                         base = d(8) + r * d(15) + hh * d(16)
-                        load_rows(sB, base, d(9), HDS, SB_ROWS, NS)
-                        x_h = sA[r, hh * HDS : (hh + 1) * HDS]
+                        load_tile(sB, base, d(9), HDS, SB_ROWS, NS)
+                        x_h = pa[r, hh * HDS : (hh + 1) * HDS]
                         dt_sp = jax.nn.softplus(dt_row[hh])
                         da = jnp.exp(dt_sp * (-jnp.exp(a_log[hh])))
                         new_state = (sB[:HDS, :NS] * da
                                      + (dt_sp * x_h)[:, None] * bvec[None, :])
                         y_h = new_state @ cvec + dsk[hh] * x_h
                         sB[:HDS, :NS] = new_state
-                        store_rows(sB, base, d(9), HDS, SB_ROWS, NS)
+                        store_tile(sB, base, d(9), HDS, SB_ROWS, NS)
                         row_out = jax.lax.dynamic_update_slice(
                             row_out, y_h, (hh * HDS,))
                     acc[r, :] = row_out
@@ -407,11 +591,11 @@ def make_megakernel(statics: Dict[str, Any], num_tasks: int,
 
         def k_conv():
             m = d(1)
-            load_rows(sA, d(6), d(7), m, TM, TN)           # x tile
-            load_rows(sB, d(10), d(11), WC, SB_ROWS, TN)   # conv_w (W, n)
+            pa = primary()                                 # x tile
+            load_tile(sB, d(10), d(11), WC, SB_ROWS, TN)   # conv_w (W, n)
             @pl.when(d(12) >= 0)
             def _():
-                load_rows(sC, d(12), 1, 1, 1, TN)
+                load_row(sC, 0, d(12), TN)
             @pl.when(d(12) < 0)
             def _():
                 sC[0, :] = jnp.zeros((TN,), jnp.float32)
@@ -420,13 +604,13 @@ def make_megakernel(statics: Dict[str, Any], num_tasks: int,
                 @pl.when(r < m)
                 def _(r=r):
                     base = d(8) + r * d(15)
-                    load_rows(sD, base, d(9), WC, WC, TN)
-                    rows = [sD[j, :TN] for j in range(1, WC)] + [sA[r, :TN]]
+                    load_tile(sD, base, d(9), WC, WC, TN)
+                    rows = [sD[j, :TN] for j in range(1, WC)] + [pa[r, :TN]]
                     y = bias
                     for j in range(WC):
                         sD[j, :] = rows[j]
                         y = y + rows[j] * sB[j, :TN]
-                    store_rows(sD, base, d(9), WC, WC, TN)
+                    store_tile(sD, base, d(9), WC, WC, TN)
                     acc[r, :] = jax.nn.silu(y)
                     store_row_vec(acc, r, d(4) + r * d(5), TN)
 
@@ -435,6 +619,17 @@ def make_megakernel(statics: Dict[str, Any], num_tasks: int,
             k_cache_update, k_embed, k_softmax_topk, k_moe_gg,
             k_moe_combine, k_ssm, k_conv,
         ])
+
+        # flush the DMA counter block to its reserved heap slot — only the
+        # final grid step: the totals accumulate in scratch and nothing
+        # reads the heap copy mid-launch
+        @pl.when(t == num_tasks - 1)
+        def _():
+            cp = pltpu.make_async_copy(
+                cnt.at[0, pl.ds(0, STATS_WORDS)],
+                heap.at[pl.ds(STATS_OFF, STATS_WORDS)], sem)
+            cp.start()
+            cp.wait()
 
     sd_rows = max(TM, TS, WC, 8)
     grid_spec = pltpu.PrefetchScalarGridSpec(
@@ -449,7 +644,10 @@ def make_megakernel(statics: Dict[str, Any], num_tasks: int,
             pltpu.VMEM((sd_rows, TN), jnp.float32),    # sD
             pltpu.VMEM((TM, TN), jnp.float32),         # acc
             pltpu.VMEM((TM, TN), jnp.float32),         # acc2
-            pltpu.SemaphoreType.DMA,
+            pltpu.VMEM((2, TM, TN), jnp.float32),      # sP (double buffer)
+            pltpu.VMEM((1, STATS_WORDS), jnp.float32),  # cnt (DMA counters)
+            pltpu.SemaphoreType.DMA,                   # sem (bulk tiles)
+            pltpu.SemaphoreType.DMA((2,)),             # psem (per pf slot)
         ],
     )
     return functools.partial(

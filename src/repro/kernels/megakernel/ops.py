@@ -40,18 +40,22 @@ __all__ = ["compile_decode_megakernel", "MegakernelExecutor",
 def compile_decode_megakernel(cfg, batch: int, max_seq: int,
                               *, max_rows: int = 8,
                               latency_aware: bool = True,
-                              event_fusion: bool = True
+                              event_fusion: bool = True,
+                              pipeline_depth: int = 2
                               ) -> MegakernelPlan:
     """Lower cfg's decode step end-to-end: op graph → tGraph → descriptors.
 
     ``max_rows`` caps tile rows (the megakernel's TM) — decode batches are
-    small, so row tiles stay register-friendly.
+    small, so row tiles stay register-friendly.  ``pipeline_depth`` is the
+    separation the scheduler enforces between producer→consumer pairs
+    (2 = the kernel's double buffer).
     """
     g = build_decode_graph(cfg, batch, max_seq)
     opts = CompileOptions(
         decompose=DecomposeConfig(max_rows=max_rows),
         latency_aware_schedule=latency_aware,
         event_fusion=event_fusion,
+        pipeline_depth=pipeline_depth,
     )
     compiled = megakernelize(g, opts)
     return lower_tgraph(compiled, cfg)
@@ -187,6 +191,22 @@ class MegakernelExecutor:
         self._heap, logits = self._jstep(self._heap, vals)
         self.step_count += 1
         return np.asarray(logits)
+
+    def pipeline_counters(self) -> Dict[str, int]:
+        """The kernel-maintained DMA counters for the LAST step, read
+        from the reserved stats block at the heap tail (the kernel
+        re-zeroes the block at grid step 0 of every launch): bulk tile
+        DMAs issued, row copies inside them (what the pre-pipelining
+        kernel issued as individual DMAs), prefetch tiles issued, and
+        primary tiles demand-loaded (pipeline misses)."""
+        assert self._heap is not None, "upload() before pipeline_counters()"
+        off = self.plan.stats_offset
+        vals = np.asarray(self._heap[off : off + 5])
+        # word 4 is the 2^20-unit spill of the row count (f32 exactness)
+        return {"bulk_copies": int(vals[0]),
+                "row_copies": int(vals[1]) + (1 << 20) * int(vals[4]),
+                "prefetch_tiles": int(vals[2]),
+                "primary_fallbacks": int(vals[3])}
 
     def read_heap(self) -> np.ndarray:
         """Host copy of the resident heap (state inspection / snapshots)."""

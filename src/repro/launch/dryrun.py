@@ -42,6 +42,9 @@ def program_stats(arch: str, shape) -> dict:
     s = prog.stats
     rec["workspace_reuse_x"] = round(s["workspace_reuse_x"], 2)
     rec["fusion_reduction"] = round(s["fusion_reduction"], 1)
+    ps = prog.pipeline_stats
+    rec["pipeline_stalls"] = ps["stalls"]
+    rec["pipeline_stalls_naive"] = ps["stalls_naive"]
     return rec
 
 

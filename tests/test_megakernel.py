@@ -12,6 +12,7 @@ from repro.configs import get_config
 from repro.core.interpreter import execute_reference
 from repro.core.lowering import decode_bindings
 from repro.kernels.megakernel import run_megakernel
+from repro.kernels.megakernel.desc import DESC_WORDS
 from repro.kernels.megakernel.ops import compile_decode_megakernel
 from repro.models import init_cache, init_params, serve_step
 
@@ -74,8 +75,9 @@ def test_single_launch_property():
                               n_layers=2)
     prog = compile_decode_megakernel(cfg, 2, 16)
     assert prog.descs.shape[0] == len(prog.compiled.order)
-    # descriptor table is the fixed-size uniform representation (paper §4)
-    assert prog.descs.shape[1] == 24
+    # descriptor table is the fixed-size uniform representation (paper §4;
+    # words 24-31 carry the software-pipelining prefetch plan)
+    assert prog.descs.shape[1] == DESC_WORDS == 32
     # in-place state aliasing: cache2 shares the cache's heap slot
     lay = prog.layout
     assert lay["L0.k_cache2"].offset == lay["L0.k_cache"].offset
