@@ -88,10 +88,15 @@ def simulated_sweep() -> dict:
             # linearization's stall count alongside its own
             sched = megakernelize(build_decode_graph(cfg, 2, 32),
                                   CompileOptions(pipeline_depth=depth))
+            # n_workers=1: the pipelining ablation is a per-worker-stream
+            # property (wider partitions hide serialized loads behind
+            # idle-worker slack; the W sweep is fig14_worker_scaling)
             off = simulate(sched, SimConfig(mode="mpk", pipelined=False,
-                                            pipeline_depth=depth))
+                                            pipeline_depth=depth,
+                                            n_workers=1))
             on = simulate(sched, SimConfig(mode="mpk", pipelined=True,
-                                           pipeline_depth=depth))
+                                           pipeline_depth=depth,
+                                           n_workers=1))
             row = {
                 "stalls_naive": sched.stats["pipeline_stalls_naive"],
                 "stalls_scheduled": sched.stats["pipeline_stalls"],

@@ -17,6 +17,7 @@ SECTIONS = [
     "fig11_tp_scaling",
     "fig12_pipelining",
     "fig13_overlap",
+    "fig14_worker_scaling",
     "launch_reduction",
     "serving_load",
     "roofline_table",

@@ -101,11 +101,12 @@ class Program:
 
     def __init__(self, cfg, batch: int, max_seq: int,
                  step_cache: Optional[Dict[tuple, Callable]] = None,
-                 pipeline_depth: int = 2):
+                 pipeline_depth: int = 2, num_workers: int = 1):
         self.cfg = cfg
         self.batch = batch
         self.max_seq = max_seq
         self.pipeline_depth = pipeline_depth
+        self.num_workers = num_workers
         self.step_count = 0
         # (cfg, width)-keyed jitted prefill fns; pass a shared dict to
         # reuse compiled steps across programs/engines (benchmark warmup)
@@ -189,7 +190,8 @@ class Program:
         if self._compiled is None:
             g = build_decode_graph(self.cfg, self.batch, self.max_seq)
             self._compiled = megakernelize(g, CompileOptions(
-                pipeline_depth=self.pipeline_depth))
+                pipeline_depth=self.pipeline_depth,
+                num_workers=self.num_workers))
         return self._compiled
 
     @property
@@ -210,6 +212,28 @@ class Program:
                                   s.get("pipeline_stalls", 0)),
             "stall_reduction": s.get("stall_reduction", 1.0),
             "pipeline_depth": s.get("pipeline_depth", 2),
+        }
+
+    @property
+    def worker_stats(self) -> Dict[str, Any]:
+        """The W-worker schedule→runtime contract: the compiler's worker
+        partition (queue lengths, cross-worker event cut) plus the
+        simulator's replay of that exact partition (makespan, per-worker
+        utilization).  The megakernel backend extends this with the
+        kernel's own per-worker DMA/event counters after a step."""
+        from ..core.runtime_sim import SimConfig, simulate
+        part = self.compiled.partition
+        res = simulate(self.compiled,
+                       SimConfig(mode="mpk", n_workers=part.requested_workers,
+                                 pipeline_depth=self.pipeline_depth))
+        return {
+            "num_workers": part.num_workers,
+            "requested_workers": part.requested_workers,
+            "queue_lens": [len(q) for q in part.queues],
+            "cross_worker_deps": len(part.cross_deps),
+            "partition_steps": part.num_steps,
+            "sim_makespan_us": res.makespan * 1e6,
+            "worker_utilization": list(res.worker_busy or []),
         }
 
     def describe(self) -> Dict[str, Any]:
@@ -239,8 +263,9 @@ class JaxProgram(Program):
     backend = "jax"
 
     def __init__(self, cfg, batch, max_seq, step_cache=None,
-                 pipeline_depth: int = 2):
-        super().__init__(cfg, batch, max_seq, step_cache, pipeline_depth)
+                 pipeline_depth: int = 2, num_workers: int = 1):
+        super().__init__(cfg, batch, max_seq, step_cache, pipeline_depth,
+                         num_workers)
         self._cache = None
         # donated slot zeroing: no full-cache copy per admission
         self._jreset = jax.jit(
@@ -295,7 +320,8 @@ class InterpreterProgram(Program):
     def __init__(self, cfg, batch, max_seq, step_cache=None, *,
                  options: Optional[CompileOptions] = None, tp: int = 1):
         super().__init__(cfg, batch, max_seq, step_cache,
-                         options.pipeline_depth if options else 2)
+                         options.pipeline_depth if options else 2,
+                         options.num_workers if options else 1)
         g = build_decode_graph(cfg, batch, max_seq, tp=tp)
         t0 = time.perf_counter()
         self._compiled = megakernelize(g, options)
@@ -348,15 +374,17 @@ class PallasProgram(Program):
 
     def __init__(self, cfg, batch, max_seq, step_cache=None, *,
                  max_rows: int = 8, latency_aware: bool = True,
-                 event_fusion: bool = True, pipeline_depth: int = 2):
-        super().__init__(cfg, batch, max_seq, step_cache, pipeline_depth)
+                 event_fusion: bool = True, pipeline_depth: int = 2,
+                 num_workers: int = 1):
+        super().__init__(cfg, batch, max_seq, step_cache, pipeline_depth,
+                         num_workers)
         # late import keeps the api package importable without pallas
         from ..kernels.megakernel import (MegakernelExecutor,
                                           compile_decode_megakernel)
         self.plan = compile_decode_megakernel(
             cfg, batch, max_seq, max_rows=max_rows,
             latency_aware=latency_aware, event_fusion=event_fusion,
-            pipeline_depth=pipeline_depth)
+            pipeline_depth=pipeline_depth, num_workers=num_workers)
         self._compiled = self.plan.compiled
         self.executor = MegakernelExecutor(self.plan, cfg)
         self._smap = _state_map(cfg)
@@ -380,6 +408,20 @@ class PallasProgram(Program):
         out.update(self.plan.pipeline_stats())
         if self.step_count > 0:
             out.update(self.executor.pipeline_counters())
+        return out
+
+    @property
+    def worker_stats(self) -> Dict[str, Any]:
+        """Simulator-side partition stats plus — after a step — the
+        kernel's live per-worker DMA/event counters (the decentralized
+        runtime's own accounting, read from the heap stats blocks)."""
+        out = dict(Program.worker_stats.fget(self))
+        if self.step_count > 0:
+            per_worker = self.executor.worker_counters()
+            out["kernel_workers"] = per_worker
+            for k in ("event_waits", "event_wait_violations",
+                      "event_signals"):
+                out[k] = sum(d[k] for d in per_worker)
         return out
 
     def bind(self, params) -> "Program":
@@ -449,7 +491,7 @@ def compile(cfg, batch: int, max_seq: int, backend: str = "jax", *,
             step_cache: Optional[Dict[tuple, Callable]] = None,
             max_rows: Optional[int] = None, latency_aware: bool = True,
             event_fusion: bool = True, pipeline_depth: int = 2,
-            tp: int = 1) -> Program:
+            num_workers: int = 1, tp: int = 1) -> Program:
     """Compile ``cfg``'s decode step once; returns a stateful
     :class:`Program` for ``backend`` ("jax" | "interpreter" |
     "megakernel").
@@ -460,13 +502,19 @@ def compile(cfg, batch: int, max_seq: int, backend: str = "jax", *,
     ``latency_aware``/``event_fusion`` toggle the scheduler/fusion passes
     (interpreter + megakernel), ``pipeline_depth`` sets the scheduler's
     producer→consumer separation target (2 = the megakernel's double
-    buffer; see ``Program.pipeline_stats``), ``tp`` inserts AllReduce ops
-    (interpreter stats only).  ``step_cache`` shares (cfg, width)-keyed
-    jitted prefill steps across programs.
+    buffer; see ``Program.pipeline_stats``), ``num_workers`` partitions
+    the schedule onto W decentralized workers (per-worker descriptor
+    streams + in-heap event counters on the megakernel; see
+    ``Program.worker_stats`` — outputs are bitwise-identical across W),
+    ``tp`` inserts AllReduce ops (interpreter stats only).
+    ``step_cache`` shares (cfg, width)-keyed jitted prefill steps across
+    programs.
     """
     if backend not in _BACKEND_CLASSES:
         raise ValueError(
             f"unknown backend {backend!r}; expected one of {BACKENDS}")
+    if num_workers < 1:
+        raise ValueError(f"num_workers must be >= 1, got {num_workers}")
     if backend == "interpreter":
         dec = (DecomposeConfig() if max_rows is None
                else DecomposeConfig(max_rows=max_rows))
@@ -474,7 +522,8 @@ def compile(cfg, batch: int, max_seq: int, backend: str = "jax", *,
             decompose=dec,
             latency_aware_schedule=latency_aware,
             event_fusion=event_fusion,
-            pipeline_depth=pipeline_depth)
+            pipeline_depth=pipeline_depth,
+            num_workers=num_workers)
         return InterpreterProgram(cfg, batch, max_seq, step_cache,
                                   options=opts, tp=tp)
     if tp != 1:
@@ -485,6 +534,8 @@ def compile(cfg, batch: int, max_seq: int, backend: str = "jax", *,
                              max_rows=8 if max_rows is None else max_rows,
                              latency_aware=latency_aware,
                              event_fusion=event_fusion,
-                             pipeline_depth=pipeline_depth)
+                             pipeline_depth=pipeline_depth,
+                             num_workers=num_workers)
     return JaxProgram(cfg, batch, max_seq, step_cache,
-                      pipeline_depth=pipeline_depth)
+                      pipeline_depth=pipeline_depth,
+                      num_workers=num_workers)

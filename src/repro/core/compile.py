@@ -24,9 +24,11 @@ from .graph import ComputationGraph, OpKind
 from .linearize import LinearizedTGraph, linearize
 from .normalize import normalize
 from .schedule import (
+    WorkerPartition,
     count_pipeline_stalls,
     latency_aware_linearize,
     overlap_statistics,
+    partition_workers,
 )
 from .tgraph import TGraph
 
@@ -46,6 +48,11 @@ class CompileOptions:
     #: megakernel software-pipeline depth the scheduler separates
     #: producer→consumer pairs by (2 = the kernel's double buffer)
     pipeline_depth: int = 2
+    #: decentralized workers the schedule is partitioned onto (paper §5):
+    #: the linearized order is split into per-worker queues by the
+    #: makespan-minimizing partitioner, lowered to per-worker descriptor
+    #: streams synchronized through in-heap event counters
+    num_workers: int = 1
 
 
 @dataclasses.dataclass
@@ -58,6 +65,9 @@ class CompiledTGraph:
     workspace_layout: Dict[str, Tuple[int, int]]
     workspace_size: int
     stats: Dict[str, Any]
+    #: the worker partition of the linearized schedule (always present
+    #: after ``megakernelize``; width 1 is exactly the linearized order)
+    partition: Optional[WorkerPartition] = None
 
     # ------------------------------------------------------------------
     @property
@@ -286,6 +296,9 @@ def megakernelize(
 
     layout, ws_size = _pack_workspace(g, opts.workspace_align, lin, tg)
 
+    partition = partition_workers(tg, lin, opts.num_workers,
+                                  opts.pipeline_depth)
+
     stats = dict(tg.stats)
     stats.pop("per_op_tasks", None)
     stats["pipeline_depth"] = opts.pipeline_depth
@@ -302,5 +315,10 @@ def megakernelize(
                for n in layout)
     stats["workspace_elements_no_reuse"] = bump
     stats["workspace_reuse_x"] = bump / max(ws_size, 1)
-    compiled = CompiledTGraph(g, tg, lin, layout, ws_size, stats)
+    stats["num_workers"] = partition.num_workers
+    stats["worker_queue_lens"] = [len(q) for q in partition.queues]
+    stats["cross_worker_deps"] = len(partition.cross_deps)
+    stats["partition_steps"] = partition.num_steps
+    stats["partition_makespan_est_us"] = partition.est_makespan * 1e6
+    compiled = CompiledTGraph(g, tg, lin, layout, ws_size, stats, partition)
     return compiled

@@ -8,16 +8,23 @@ execution models:
 
   kernel_per_op — operator-at-a-time with a kernel barrier + launch
                   overhead between operators (the baseline of Fig. 2/9),
-  mpk           — event-driven task execution across workers, JIT tasks
-                  paying the worker→scheduler→worker hop and AOT tasks
-                  one event wait (§5.2), communication overlapped on DMA
-                  channels (§6.5),
-  mpk_coarse    — mpk but with operator-granularity events (Fig. 5c),
-                  the compute–communication-overlap ablation of Fig. 13.
+  mpk           — the compiler's actual worker partition
+                  (``core/schedule.partition_workers``) replayed queue by
+                  queue: per-worker static streams, cross-worker
+                  dependencies paying one event-counter wait (AOT) or the
+                  worker→scheduler→worker hop (JIT, §5.2), communication
+                  overlapped on DMA channels (§6.5).  The simulator no
+                  longer invents its own greedy lane assignment — the
+                  makespan/utilization it reports measure the schedule the
+                  megakernel really executes,
+  mpk_coarse    — event-driven execution with operator-granularity events
+                  (Fig. 5c), the compute–communication-overlap ablation
+                  of Fig. 13.
 
 Per-task time = max(flops/worker_flops, bytes/worker_bw) + task_overhead;
-comm-task time = bytes/ici_bw.  Hardware constants default to the
-TPU-v5e-class chip used in the roofline analysis.
+comm-task time = bytes/ici_bw.  Hardware constants come from
+``roofline/hw.py`` (the TPU-v5e-class chip of the roofline analysis) so
+roofline, scheduler and simulator share one source of truth.
 """
 from __future__ import annotations
 
@@ -25,23 +32,26 @@ import dataclasses
 import heapq
 from typing import Dict, List, Optional
 
+from ..roofline.hw import (AOT_EVENT_WAIT, COMM_LATENCY, COMPUTE_LATENCY,
+                           JIT_HOP, TASK_OVERHEAD, TPU_V5E, WORKERS_PER_CHIP)
 from .compile import CompiledTGraph
+from .schedule import partition_workers, replay_partition
 
 __all__ = ["SimConfig", "SimResult", "simulate"]
 
 
 @dataclasses.dataclass
 class SimConfig:
-    n_workers: int = 8               # SM/core-equivalents per chip
-    worker_flops: float = 197e12 / 8
-    worker_bw: float = 819e9 / 8
-    ici_bw: float = 50e9
+    n_workers: int = WORKERS_PER_CHIP          # SM/core-equivalents per chip
+    worker_flops: float = TPU_V5E.peak_flops_bf16 / WORKERS_PER_CHIP
+    worker_bw: float = TPU_V5E.hbm_bw / WORKERS_PER_CHIP
+    ici_bw: float = TPU_V5E.ici_link_bw
     n_dma: int = 4                   # concurrent comm channels
-    task_overhead: float = 0.1e-6    # dequeue + descriptor decode
-    compute_latency: float = 0.25e-6  # VPU/MXU issue-latency floor per task
-    comm_latency: float = 2.0e-6     # per-collective base latency (hops)
-    jit_hop: float = 0.6e-6          # worker->scheduler->worker (§5.2)
-    aot_wait: float = 0.2e-6         # one event wait
+    task_overhead: float = TASK_OVERHEAD      # dequeue + descriptor decode
+    compute_latency: float = COMPUTE_LATENCY  # VPU/MXU issue floor per task
+    comm_latency: float = COMM_LATENCY    # per-collective base latency
+    jit_hop: float = JIT_HOP          # worker->scheduler->worker (§5.2)
+    aot_wait: float = AOT_EVENT_WAIT  # one event wait
     launch_overhead: float = 3.8e-6  # per-kernel launch (paper §6.6)
     mode: str = "mpk"                # kernel_per_op | mpk | mpk_coarse
     overlap_comm: bool = True
@@ -62,6 +72,9 @@ class SimResult:
     n_tasks: int
     n_comm: int
     launches: int
+    #: per-worker utilization (busy/makespan) when the run replayed a
+    #: worker partition (mode="mpk"); None for the other models
+    worker_busy: Optional[List[float]] = None
 
 
 def _task_time(task, cfg: SimConfig, stalled: bool = False,
@@ -118,10 +131,47 @@ def simulate(compiled: CompiledTGraph,
                          sum(1 for x in tg.tasks.values() if x.is_comm),
                          len(per_op))
 
-    # ---- event-driven in-kernel runtime ----
-    # pipeline stalls: producer→consumer pairs the linearized schedule
-    # placed closer than the pipeline depth lose their load/compute
-    # overlap (the prefetch plan demand-loads exactly these tiles)
+    if cfg.mode == "mpk":
+        # ---- replay the compiler's worker partition (paper §5) ----
+        # The partition IS the schedule the megakernel executes: static
+        # per-worker queues cut out of the linearized order, synchronized
+        # by in-heap event counters on the cross-worker edges.  When the
+        # compile-time width differs from the simulated one (W sweeps),
+        # the same partitioner is re-run at the requested width — never
+        # an ad-hoc greedy lane assignment.
+        part = compiled.partition
+
+        def time_fn(task, is_stalled):
+            return _task_time(task, cfg, is_stalled)
+
+        def wait_fn(task):
+            return (cfg.jit_hop if task.launch_mode == "jit"
+                    else cfg.aot_wait)
+
+        if part is None or part.requested_workers != cfg.n_workers:
+            part = partition_workers(tg, compiled.lin, cfg.n_workers,
+                                     cfg.pipeline_depth,
+                                     time_fn=time_fn, wait_fn=wait_fn,
+                                     overlap_comm=cfg.overlap_comm,
+                                     n_dma=cfg.n_dma)
+        res = replay_partition(
+            tg, part.queues, part.step_of, time_fn=time_fn,
+            wait_fn=wait_fn,
+            pipeline_depth=cfg.pipeline_depth if cfg.pipelined else 1,
+            overlap_comm=cfg.overlap_comm, n_dma=cfg.n_dma)
+        width = max(1, part.num_workers)
+        makespan = res.makespan
+        return SimResult(
+            makespan,
+            sum(res.busy) / (makespan * width + 1e-30),
+            sum(1 for x in tg.tasks.values() if not x.is_dummy),
+            sum(1 for x in tg.tasks.values() if x.is_comm),
+            1,
+            worker_busy=[b / max(makespan, 1e-30) for b in res.busy])
+
+    # ---- event-driven runtime with operator-granularity events ----
+    # (mpk_coarse, the Fig. 5c/13 ablation: coarse events cannot express
+    # a per-task worker cut, so this keeps the event-driven model)
     stalled: set = set()
     if cfg.pipelined:
         pos = compiled.lin.index

@@ -17,7 +17,7 @@ outputs alias their input state region (in-place update), exactly like the
 persistent kernel on real hardware; the SSA tGraph interpreter remains the
 copying oracle.
 
-Descriptor layout (int32 × 32) — field use per kind documented inline:
+Descriptor layout (int32 × 36) — field use per kind documented inline:
    0 kind   1 m      2 n      3 k      4 out_off 5 ldo
    6 a_off  7 lda    8 b_off  9 ldb   10 c_off  11 ldc
   12 d_off 13 ldd   14 act   15 aux0  16 aux1   17 fbits0
@@ -26,32 +26,61 @@ Descriptor layout (int32 × 32) — field use per kind documented inline:
 Words 24-31 are the compiler-emitted **prefetch plan** (§5 software
 pipelining) consumed by the kernel's double-buffered pipeline:
 
-  24 pf_off  25 pf_ld  26 pf_rows   task t+1's primary operand tile —
-     the kernel issues this as one bulk async DMA into the B side of the
-     ping-pong buffer while task t computes.  ``pf_rows == 0`` means no
-     prefetch (next task has no regular primary tile, or its tile
-     overlaps something this task writes — the hazard analysis below).
+  24 pf_off  25 pf_ld  26 pf_rows   the NEXT task in this worker's
+     stream — the kernel issues this as one bulk async DMA into the B
+     side of the worker's ping-pong buffer while the current slot
+     computes.  ``pf_rows == 0`` means no prefetch (next slot has no
+     regular primary tile, or its tile overlaps something any worker
+     may write in this or the next step — the hazard analysis below).
   27 self_pf                        1 iff THIS task's primary tile was
-     prefetched by its predecessor (wait on the slot semaphore instead
-     of demand-loading).
+     prefetched by its stream predecessor (wait on the slot semaphore
+     instead of demand-loading).
   28 sp_off  29 sp_ld  30 sp_rows   this task's own primary record (the
      wait/demand-load reconstruction — the kernel never decodes two
-     descriptors per step).  Equal to the predecessor's words 24-26
-     whenever ``self_pf == 1`` (asserted at lowering).
+     descriptors per step).  Equal to the stream predecessor's words
+     24-26 whenever ``self_pf == 1`` (asserted at lowering).
   31 reserved
+
+Words 32-35 are the **event-counter synchronization** of the W-worker
+decentralized runtime (paper §5.1): each cross-worker dependency edge is
+covered by an event counter resident in the heap at ``event_offset``
+(one f32 word per synchronizing event, zeroed before every launch):
+
+  32 wait_ev   event-table index this task must WAIT on before compute,
+     -1 when every producer runs earlier on this task's own worker
+     (program order covers the dependency — no event needed).
+  33 wait_cnt  the trigger count: the counter's expected value, i.e. the
+     number of tasks signaling the event.  Interpret mode executes the
+     (step, worker) grid sequentially in an order the compiler proved
+     dependency-safe, so the wait degrades to a *checked assertion*:
+     counter != wait_cnt is counted as an event-wait violation in the
+     stats block (a compiler bug, asserted zero by the tests).
+  34 sig_ev    event-table index this task increments after its stores
+     land, -1 if no consumer waits on it.
+  35 reserved
 
 Every prefetch row copy is TN elements wide: row-slot padding
 (``ld >= cols + TN``) guarantees a TN-wide read from any legal element
 offset stays inside its own row slot, so one static width serves every
 task kind.
 
-The heap tail carries a ``STATS_WORDS``-sized DMA counter block (written
-by the kernel itself, read back via
-``MegakernelExecutor.pipeline_counters()``) at ``stats_offset``.
+Multi-worker lowering: the compiler's :class:`~...core.schedule.WorkerPartition`
+assigns every task a ``(worker, step)`` coordinate; the descriptor table
+becomes a ``(num_steps * W, DESC_WORDS)`` grid (row ``step * W + worker``),
+with noop descriptors padding the steps a worker sits out.  Padding slots
+still run the prefetch phase, so a worker's double buffer stays warm
+across its idle steps.
+
+The heap tail carries the event-counter table (``num_events`` f32 words
+at ``event_offset``) followed by a per-worker ``STATS_WORDS``-sized DMA/
+event counter block (written by the kernel itself, read back via
+``MegakernelExecutor.pipeline_counters()`` / ``worker_counters()``) at
+``stats_offset``.
 """
 from __future__ import annotations
 
 import dataclasses
+import math
 from typing import Any, Dict, List, Optional, Tuple
 
 import numpy as np
@@ -66,11 +95,13 @@ __all__ = ["KIND_CODES", "DESC_WORDS", "STATS_WORDS", "PER_STEP_INPUTS",
 #: (weights, caches, SSM/conv state) is uploaded once and lives on device
 PER_STEP_INPUTS = ("tokens", "h0", "positions", "seq_lens", "live_lens")
 
-DESC_WORDS = 32
+DESC_WORDS = 36
 
-#: f32 words reserved at the heap tail for the kernel-maintained DMA
-#: counters: [0] bulk tile DMAs, [1] row copies inside them, [2] prefetch
-#: tiles issued, [3] primary tiles demand-loaded (pipeline misses)
+#: f32 words reserved PER WORKER at the heap tail for the
+#: kernel-maintained counters: [0] bulk tile DMAs, [1] row copies inside
+#: them, [2] prefetch tiles issued, [3] primary tiles demand-loaded
+#: (pipeline misses), [4] 2^20-unit spill of [1], [5] event waits
+#: checked, [6] event-wait violations (must stay 0), [7] event signals
 STATS_WORDS = 8
 
 KIND_CODES = {
@@ -132,12 +163,21 @@ class MegakernelPlan:
     step, incremental input binding) is ``ops.MegakernelExecutor``."""
 
     compiled: CompiledTGraph
-    descs: np.ndarray                 # (num_tasks, DESC_WORDS) int32
+    descs: np.ndarray                 # (num_steps * W, DESC_WORDS) int32
     layout: Dict[str, TensorSlot]
     heap_size: int
     statics: Dict[str, Any]           # compile-time kernel parameters
-    #: heap offset of the kernel-maintained DMA counter block
+    #: heap offset of the kernel-maintained per-worker counter blocks
     stats_offset: int = 0
+    #: worker count of the lowered (step, worker) grid
+    num_workers: int = 1
+    #: grid steps (max padded queue length across workers)
+    num_steps: int = 0
+    #: heap offset of the event-counter table (one f32 word per event)
+    event_offset: int = 0
+    #: number of in-heap event counters (0 when W == 1: program order
+    #: covers every dependency, no cross-worker cut exists)
+    num_events: int = 0
 
     # ------------------------------------------------- pipeline contract
     def pipeline_stats(self) -> Dict[str, Any]:
@@ -235,62 +275,119 @@ def _primary_record(d: np.ndarray):
 
 
 def _plan_prefetch(compiled: CompiledTGraph, layout: Dict[str, TensorSlot],
-                   descs: np.ndarray) -> None:
-    """Emit the per-task prefetch plan (descriptor words 24-31).
+                   grid: np.ndarray, num_steps: int, W: int) -> None:
+    """Emit the per-worker prefetch plan (descriptor words 24-31) over the
+    ``(num_steps * W, DESC_WORDS)`` grid table.
 
-    Task t's words 24-26 describe task t+1's primary operand tile iff that
-    tile cannot be clobbered by anything task t writes — the prefetch DMA
-    is issued *before* task t's stores land (true async semantics, in
-    interpret mode too), so the source slot must be disjoint from every
-    output slot of task t.  Slot-interval granularity is conservative but
-    exact under aliasing: layout resolves in-place state outputs to their
-    root slots, and both tile reads and tile writes are contained in
-    their tensor's slot by the row-padding invariant.
+    The slot at ``(w, s)`` — a task or a padding noop — prefetches the
+    primary operand tile of ``(w, s + 1)`` iff that tile cannot be
+    clobbered by anything written *concurrently*: the prefetch DMA is
+    issued before the stores of step ``s`` land, and on parallel hardware
+    every worker's step ``s`` and ``s + 1`` tasks overlap it, so the
+    source slot must be disjoint from every output slot of every task at
+    steps ``s`` and ``s + 1`` on ANY worker (except the consumer itself,
+    whose stores land after its reads).  At W = 1 this reduces exactly to
+    the single-stream hazard rule (issuing task's own outputs only).
+    Slot-interval granularity is conservative but exact under aliasing:
+    layout resolves in-place state outputs to their root slots, and both
+    tile reads and tile writes are contained in their tensor's slot by
+    the row-padding invariant.
     """
     g = compiled.graph
     tg = compiled.tg
+    part = compiled.partition
 
     def slot_iv(name: str):
         s = layout[name]
         return s.offset, s.offset + s.rows * s.ld
 
-    prim_iv = []     # per position: slot interval of the primary operand
-    out_ivs = []     # per position: slot intervals of everything written
-    for pos, tid in enumerate(compiled.order):
+    n_rows = num_steps * W
+    prim_iv = [None] * n_rows   # per grid row: primary operand slot iv
+    out_ivs = [[] for _ in range(n_rows)]   # per grid row: written slots
+    for tid in compiled.order:
         task = tg.tasks[tid]
+        row = part.step_of[tid] * W + part.worker_of[tid]
         if task.is_dummy:
-            prim_iv.append(None)
-            out_ivs.append([])
             continue
         op = g.op(task.op_id)
-        code = int(descs[pos, 0])
+        code = int(grid[row, 0])
         if code == KIND_CODES[OpKind.EMBED_LOOKUP]:
-            prim_iv.append(slot_iv(op.inputs[0]))
+            prim_iv[row] = slot_iv(op.inputs[0])
         elif code in _PRIMARY_ROWS_M:
-            prim_iv.append(slot_iv(op.inputs[_PRIMARY_ROWS_M[code]]))
-        else:
-            prim_iv.append(None)
-        out_ivs.append([slot_iv(name) for name in task.out_regions])
+            prim_iv[row] = slot_iv(op.inputs[_PRIMARY_ROWS_M[code]])
+        out_ivs[row] = [slot_iv(name) for name in task.out_regions]
 
-    n = len(compiled.order)
-    for pos in range(n):
-        rec = _primary_record(descs[pos])
+    for row in range(n_rows):
+        rec = _primary_record(grid[row])
         if rec is not None:
-            descs[pos, 28:31] = rec
-    for pos in range(n - 1):
-        rec = _primary_record(descs[pos + 1])
-        if rec is None:
-            continue
-        lo, hi = prim_iv[pos + 1]
-        if any(wlo < hi and lo < whi for wlo, whi in out_ivs[pos]):
-            continue                       # hazard: demand-load instead
-        descs[pos, 24:27] = rec
-        descs[pos + 1, 27] = 1
+            grid[row, 28:31] = rec
+
+    # output intervals of one whole step (every worker) — what a prefetch
+    # issued during that step may race against
+    def step_out_ivs(s: int, skip_row: int = -1):
+        ivs = []
+        for w in range(W):
+            r = s * W + w
+            if r != skip_row:
+                ivs.extend(out_ivs[r])
+        return ivs
+
+    for s in range(num_steps - 1):
+        hazard_now = step_out_ivs(s)
+        for w in range(W):
+            row = s * W + w
+            crow = (s + 1) * W + w
+            rec = _primary_record(grid[crow])
+            if rec is None:
+                continue
+            lo, hi = prim_iv[crow]
+            hazard = hazard_now + step_out_ivs(s + 1, skip_row=crow)
+            if any(wlo < hi and lo < whi for wlo, whi in hazard):
+                continue                   # hazard: demand-load instead
+            grid[row, 24:27] = rec
+            grid[crow, 27] = 1
     # the kernel reconstructs the prefetch copies from the consumer's own
     # words 28-30 to wait on them — both sides must agree exactly
-    for pos in range(1, n):
-        if descs[pos, 27] == 1:
-            assert (descs[pos - 1, 24:27] == descs[pos, 28:31]).all(), pos
+    for row in range(W, n_rows):
+        if grid[row, 27] == 1:
+            assert (grid[row - W, 24:27] == grid[row, 28:31]).all(), row
+
+
+def _emit_events(compiled: CompiledTGraph, grid: np.ndarray, W: int
+                 ) -> int:
+    """Emit the wait/signal words (32-34) and return the number of
+    in-heap event counters.
+
+    Only events with at least one *cross-worker* consumer get a counter:
+    a task waits on its (single, normalized) dependent event iff some
+    producer runs on another worker — same-worker producers are ordered
+    by the stream itself.  Every in-task of a waited event signals it, so
+    the counter reaches exactly the trigger count (= ``len(in_tasks)``)
+    once all producers ran; any other value observed at wait time is a
+    compiler bug (counted as a violation by the kernel, asserted zero in
+    the tests)."""
+    tg = compiled.tg
+    part = compiled.partition
+    waited: set = set()
+    for tid, task in tg.tasks.items():
+        for eid in task.dependent_events:       # normalized: at most one
+            e = tg.events[eid]
+            if any(part.worker_of[p] != part.worker_of[tid]
+                   for p in e.in_tasks):
+                waited.add(eid)
+    eidx = {eid: i for i, eid in enumerate(sorted(waited))}
+    for tid, task in tg.tasks.items():
+        row = part.step_of[tid] * W + part.worker_of[tid]
+        for eid in task.dependent_events:
+            e = tg.events[eid]
+            if eid in waited and any(part.worker_of[p] != part.worker_of[tid]
+                                     for p in e.in_tasks):
+                grid[row, 32] = eidx[eid]
+                grid[row, 33] = len(e.in_tasks)
+        for eid in task.triggering_events:      # normalized: at most one
+            if eid in waited:
+                grid[row, 34] = eidx[eid]
+    return len(eidx)
 
 
 #: outputs that alias an input region (in-place state update)
@@ -357,7 +454,35 @@ def lower_tgraph(compiled: CompiledTGraph, cfg,
     tn = tn or _align(max_n)
     layout, heap_size = _build_layout(compiled, tn)
 
+    # ---- store chunk width: the masked write-back granularity ----
+    # Output tiles store TN-wide rows; to keep a tile's write-back from
+    # spilling into a neighbouring column tile (tiles commute across
+    # workers, so the overhang would clobber finished output), stores are
+    # masked to STORE_CH-wide chunks.  STORE_CH must divide every column
+    # start and width of every column-tiled tensor — the gcd below —
+    # so masked stores are exactly tile-wide (row-only tensors only ever
+    # overhang into their row slot's zero padding).
+    store_ch = 128
+    col_starts: Dict[str, set] = {}
+    col_geom: Dict[str, list] = {}
+    for t in tg.tasks.values():
+        if t.is_dummy:
+            continue
+        op = g.op(t.op_id)
+        pr = t.out_regions[op.outputs[0]]
+        c0 = pr.starts[-1] if pr.ndim >= 2 else 0
+        nw = pr.shape[-1] if pr.ndim >= 2 else 1
+        col_starts.setdefault(op.outputs[0], set()).add(c0)
+        col_geom.setdefault(op.outputs[0], []).append((c0, nw))
+    for name, starts in col_starts.items():
+        if len(starts) > 1:
+            for c0, nw in col_geom[name]:
+                store_ch = math.gcd(store_ch, math.gcd(c0 or store_ch, nw))
+    store_ch = max(1, store_ch)
+
     descs = np.zeros((len(compiled.order), DESC_WORDS), np.int32)
+    descs[:, 32] = -1                  # wait_ev sentinel (no wait)
+    descs[:, 34] = -1                  # sig_ev sentinel (no signal)
     statics: Dict[str, Any] = {
         "TN": tn, "TM": max_m, "TK": _align(max_k),
         "HD": cfg.hd, "G": cfg.q_per_kv,
@@ -367,6 +492,7 @@ def lower_tgraph(compiled: CompiledTGraph, cfg,
         "W_CONV": cfg.ssm_conv, "TOPK": cfg.top_k,
         "NEG_EXP_A": True,
         "EPS": cfg.norm_eps,
+        "STORE_CH": store_ch,
     }
 
     for pos, tid in enumerate(compiled.order):
@@ -541,10 +667,33 @@ def lower_tgraph(compiled: CompiledTGraph, cfg,
             k_max = max(k_max, int(descs[mask, 3].max(initial=1)))
     statics["TK"] = _align(max(statics["TK"], k_max))
 
-    # ---- prefetch plan (words 24-31) + kernel DMA-counter block ----
-    _plan_prefetch(compiled, layout, descs)
+    # ---- scatter the task table onto the (step, worker) grid ----
+    part = compiled.partition
+    if part is None:                   # compiled by an older pipeline
+        from ...core.schedule import partition_workers
+        part = partition_workers(tg, compiled.lin, 1)
+        compiled.partition = part
+    W = part.num_workers
+    num_steps = part.num_steps
+    grid = np.zeros((num_steps * W, DESC_WORDS), np.int32)
+    grid[:, 32] = -1
+    grid[:, 34] = -1
+    for pos, tid in enumerate(compiled.order):
+        grid[part.step_of[tid] * W + part.worker_of[tid]] = descs[pos]
+
+    # ---- event table (words 32-34), prefetch plan (words 24-31), and
+    # the per-worker kernel counter blocks at the heap tail ----
+    num_events = _emit_events(compiled, grid, W)
+    _plan_prefetch(compiled, layout, grid, num_steps, W)
+    event_offset = heap_size
+    heap_size += num_events
     stats_offset = heap_size
+    heap_size += STATS_WORDS * W
+    statics["W"] = W
+    statics["NUM_STEPS"] = num_steps
+    statics["EVENT_OFF"] = event_offset
+    statics["N_EVENTS"] = num_events
     statics["STATS_OFF"] = stats_offset
-    heap_size += STATS_WORDS
-    return MegakernelPlan(compiled, descs, layout, heap_size, statics,
-                          stats_offset)
+    return MegakernelPlan(compiled, grid, layout, heap_size, statics,
+                          stats_offset, W, num_steps, event_offset,
+                          num_events)

@@ -1,43 +1,63 @@
 """The persistent megakernel: one ``pl.pallas_call`` executes an entire
-compiled tGraph as a stream of tasks.
+compiled tGraph as W decentralized per-worker task streams.
 
-TPU adaptation of MPK's in-kernel runtime (paper §5): the 1-D grid *is*
-the linearized task list (grid order = execution schedule = Algorithm 1's
-output); task descriptors are scalar-prefetched into SMEM (§5.3 descriptor
-prefetch); operand tiles are DMA'd HBM→VMEM as *bulk strided tiles* (one
-logical DMA per tile — issued as back-to-back row copies against one
-semaphore, which a real TPU DMA engine expresses as a single strided
-descriptor); state updates (KV-cache / conv / SSM) write in place through
-buffer aliasing.  Task dispatch is a ``lax.switch`` over the task-kind
-word — the task library below is the §4.2 per-task device-function set.
+TPU adaptation of MPK's in-kernel runtime (paper §5): the grid is 2-D
+``(step, worker)`` — each worker walks its own static descriptor stream
+(the compiler's makespan-minimizing partition of the linearized order),
+synchronized against the other workers through an **event-counter table
+resident in the heap**; task descriptors are scalar-prefetched into SMEM
+(§5.3 descriptor prefetch); operand tiles are DMA'd HBM→VMEM as *bulk
+strided tiles* (one logical DMA per tile — issued as back-to-back row
+copies against one semaphore, which a real TPU DMA engine expresses as a
+single strided descriptor); state updates (KV-cache / conv / SSM) write
+in place through buffer aliasing.  Task dispatch is a ``lax.switch``
+over the task-kind word — the task library below is the §4.2 per-task
+device-function set.
+
+Event synchronization (paper §5.1): a task whose producers run on other
+workers carries wait-words (event index + trigger count, descriptor
+words 32-33) and checks the in-heap counter before compute; after its
+stores land it increments its signal event (word 34).  Interpret mode
+executes the grid sequentially step-major (worker-fastest), an order the
+compiler proved dependency-safe, so the spin-wait of real parallel
+hardware degrades to a *checked assertion*: a counter that does not
+already equal its trigger count is a compiler bug, counted in the stats
+block as an event-wait violation (asserted zero by the tests).
 
 Cross-task software pipelining (paper §5, Fig. 12): every grid step runs
-two phases against a double-buffered primary-operand tile ``sP`` of shape
-(2, TM, TN):
+two phases against each worker's double-buffered primary-operand tile
+``sP[w]`` of shape (2, TM, TN):
 
-* **prefetch phase** — issue async loads for task t+1's primary operand
-  tile (descriptor words 24-26, emitted by the compiler's prefetch plan in
-  ``desc.py``) into the B side ``sP[(t+1) % 2]``, tracked by the per-slot
-  DMA semaphore ``psem[(t+1) % 2]``; the copies overlap task t's compute.
-* **compute phase** — wait on ``psem[t % 2]`` and consume the A side
-  ``sP[t % 2]`` (words 27-30 carry the task's own primary record so the
-  kernel never decodes two descriptors per step).  Tasks whose operand
-  could not be prefetched (hazard with the previous task's writes, or the
-  first task) demand-load the tile instead.
+* **prefetch phase** — issue async loads for the NEXT task in this
+  worker's stream (descriptor words 24-26, emitted by the compiler's
+  per-worker prefetch plan in ``desc.py``) into the B side
+  ``sP[w, (s+1) % 2]``, tracked by the per-worker per-slot DMA semaphore
+  ``psem[w, (s+1) % 2]``; the copies overlap this step's compute.
+  Padding noop slots still run this phase, keeping the buffer warm
+  across a worker's idle steps.
+* **compute phase** — wait on ``psem[w, s % 2]`` and consume the A side
+  ``sP[w, s % 2]`` (words 27-30 carry the task's own primary record so
+  the kernel never decodes two descriptors per step).  Tasks whose
+  operand could not be prefetched (hazard with a concurrent step's
+  writes, or the first task of a stream) demand-load the tile instead.
 
 Interpret mode copies at ``start()`` (verified), so the prefetch genuinely
-reads memory *before* the previous task's stores land — the compiler's
-hazard analysis is load-bearing and is exercised by the bitwise parity
-suite, exactly as on hardware.
+reads memory *before* the surrounding stores land — the compiler's
+cross-worker hazard analysis is load-bearing and is exercised by the
+bitwise parity suite, exactly as on hardware.
 
-A DMA counter block (8 f32 words at ``statics["STATS_OFF"]`` in the heap)
-is maintained by the kernel itself: [0] bulk tile DMAs issued, [1] row
-copies inside them (what the pre-pipelining kernel issued as individual
-DMAs), [2] prefetch tiles issued, [3] primary tiles demand-loaded.
-``MegakernelExecutor.pipeline_counters()`` reads it back.
+A per-worker counter block (``STATS_WORDS`` f32 words per worker at
+``statics["STATS_OFF"]`` in the heap) is maintained by the kernel
+itself: [0] bulk tile DMAs issued, [1] row copies inside them (what the
+pre-pipelining kernel issued as individual DMAs), [2] prefetch tiles
+issued, [3] primary tiles demand-loaded, [5] event waits checked,
+[6] event-wait violations, [7] event signals.
+``MegakernelExecutor.pipeline_counters()`` / ``worker_counters()`` read
+it back.
 
 Validated in interpret mode against the numpy tGraph interpreter and the
-JAX model oracle (tests/test_megakernel.py, tests/test_program_api.py).
+JAX model oracle (tests/test_megakernel.py, tests/test_program_api.py,
+tests/test_workers.py for W > 1).
 """
 from __future__ import annotations
 
@@ -76,10 +96,12 @@ def _act(y, act_id):
     )
 
 
-def make_megakernel(statics: Dict[str, Any], num_tasks: int,
+def make_megakernel(statics: Dict[str, Any], num_steps: int,
                     heap_size: int):
     global _MAKE_COUNT
     _MAKE_COUNT += 1
+    W = max(1, statics.get("W", 1))
+    EVENT_OFF = statics.get("EVENT_OFF", 0)
     TN = statics["TN"]
     TM = statics["TM"]
     TKC = min(128, max(8, statics["TK"]))
@@ -99,31 +121,39 @@ def make_megakernel(statics: Dict[str, Any], num_tasks: int,
     TOPK = max(1, statics["TOPK"])
     EMAX = max(1, statics.get("E_MAX", 1))
     STATS_OFF = statics["STATS_OFF"]
+    SCH_W = max(1, statics.get("STORE_CH", 128))   # masked-store chunk
     SB_ROWS = max(TKC, TS, HDS, WC, 8)
     TNK = max(TN, TKC)
 
-    def kernel(desc, heap_in, heap, sA, sB, sC, sD, acc, acc2, sP, cnt,
-               sem, psem):
-        t = pl.program_id(0)
+    def kernel(desc, heap_in, heap, sA, sB, sC, sD, acc, acc2, sP, sE,
+               cnt, sem, psem):
+        s = pl.program_id(0)                # grid step (shared time axis)
+        w_id = pl.program_id(1)             # worker lane
+        t = s * W + w_id                    # row in the descriptor grid
         d = lambda i: desc[t, i]
-        slot = jax.lax.rem(t, 2)            # A side: this task's operands
-        nslot = jax.lax.rem(t + 1, 2)       # B side: prefetch target
+        slot = jax.lax.rem(s, 2)            # A side: this step's operands
+        nslot = jax.lax.rem(s + 1, 2)       # B side: prefetch target
 
-        @pl.when(t == 0)
-        def _():
-            cnt[0, :] = jnp.zeros((STATS_WORDS,), jnp.float32)
+        @pl.when(s == 0)
+        def _():                            # each worker zeroes its row
+            cnt[pl.ds(w_id, 1), :] = jnp.zeros((1, STATS_WORDS),
+                                               jnp.float32)
+
+        def cadd(j, v):
+            """Accumulate into this worker's counter row."""
+            cnt[pl.ds(w_id, 1), j] = cnt[pl.ds(w_id, 1), j] + v
 
         def _count(nrows):
             """One bulk tile DMA moving ``nrows`` strided rows.  The row
             total spills into a 2^20-unit high word so the f32 counters
             stay exact far past 2^24 rows/launch (full-size models)."""
-            cnt[0, 0] += 1.0
-            cnt[0, 1] += jnp.asarray(nrows).astype(jnp.float32)
+            cadd(0, 1.0)
+            cadd(1, jnp.asarray(nrows).astype(jnp.float32))
 
-            @pl.when(cnt[0, 1] >= 1048576.0)
+            @pl.when(cnt[pl.ds(w_id, 1), 1][0] >= 1048576.0)
             def _():
-                cnt[0, 4] += 1.0
-                cnt[0, 1] -= 1048576.0
+                cadd(4, 1.0)
+                cadd(1, -1048576.0)
 
         # ---------------- DMA helpers (all through the aliased out ref) ---
         def load_tile(dst, base, ld, nrows, max_rows, width):
@@ -161,29 +191,54 @@ def make_megakernel(statics: Dict[str, Any], num_tasks: int,
                 return 0
             jax.lax.fori_loop(0, max_rows, fin_body, 0)
 
-        def store_tile(src, base, ld, nrows, max_rows, width):
-            """Bulk strided write-back: issue all row copies, wait once."""
+        def store_tile(src, base, ld, nrows, max_rows, width, valid=None):
+            """Bulk strided write-back: issue all row copies, wait once.
+
+            ``valid`` (dynamic) masks the store to 128-wide chunks whose
+            start lies inside the task's true output width: a tile's
+            write-back must never spill into a neighbouring column tile
+            of the same tensor — on one worker the rightful tile always
+            re-wrote the overhang later, but across workers the tiles
+            commute, so an overhanging store would clobber a neighbour's
+            finished output.  Chunk starts are 128-aligned exactly like
+            the decomposer's column tiles, so masked stores are disjoint
+            between tiles (the tail chunk only ever overhangs into the
+            row slot's zero padding)."""
             nrows = jnp.asarray(nrows, jnp.int32)
 
             @pl.when(nrows > 0)
             def _():
                 _count(nrows)
 
+            chw = min(SCH_W, width)
+            nch = -(-width // chw) if valid is not None else 1
+
+            def chunks(i, fn):
+                if valid is None:
+                    fn(i, 0, width)
+                else:
+                    for j in range(nch):
+                        @pl.when(j * chw < jnp.asarray(valid))
+                        def _(j=j):
+                            fn(i, j * chw, chw)
+
             def start_body(i, _):
                 @pl.when(i < nrows)
                 def _():
-                    pltpu.make_async_copy(
-                        src.at[i, pl.ds(0, width)],
-                        heap.at[pl.ds(base + i * ld, width)], sem).start()
+                    chunks(i, lambda i, c0, cw: pltpu.make_async_copy(
+                        src.at[i, pl.ds(c0, cw)],
+                        heap.at[pl.ds(base + i * ld + c0, cw)],
+                        sem).start())
                 return 0
             jax.lax.fori_loop(0, max_rows, start_body, 0)
 
             def fin_body(i, _):
                 @pl.when(i < nrows)
                 def _():
-                    pltpu.make_async_copy(
-                        src.at[i, pl.ds(0, width)],
-                        heap.at[pl.ds(base + i * ld, width)], sem).wait()
+                    chunks(i, lambda i, c0, cw: pltpu.make_async_copy(
+                        src.at[i, pl.ds(c0, cw)],
+                        heap.at[pl.ds(base + i * ld + c0, cw)],
+                        sem).wait())
                 return 0
             jax.lax.fori_loop(0, max_rows, fin_body, 0)
 
@@ -226,78 +281,116 @@ def make_megakernel(statics: Dict[str, Any], num_tasks: int,
                 return 0
             jax.lax.fori_loop(0, max_elems, fin, 0)
 
-        def store_row_vec(vec_2d, row, base, width):
+        def store_row_vec(vec_2d, row, base, width, valid=None):
+            """Single-row store, chunk-masked like ``store_tile``."""
             _count(1)
-            cp = pltpu.make_async_copy(
-                vec_2d.at[row, pl.ds(0, width)],
-                heap.at[pl.ds(base, width)], sem)
-            cp.start()
-            cp.wait()
+            if valid is None:
+                cp = pltpu.make_async_copy(
+                    vec_2d.at[row, pl.ds(0, width)],
+                    heap.at[pl.ds(base, width)], sem)
+                cp.start()
+                cp.wait()
+                return
+            chw = min(SCH_W, width)
+            for j in range(-(-width // chw)):
+                @pl.when(j * chw < jnp.asarray(valid))
+                def _(j=j):
+                    cp = pltpu.make_async_copy(
+                        vec_2d.at[row, pl.ds(j * chw, chw)],
+                        heap.at[pl.ds(base + j * chw, chw)], sem)
+                    cp.start()
+                    cp.wait()
 
-        def store_primary_row(r, base):
+        def store_primary_row(r, base, valid):
             """Write one row of the primary tile back to the heap (the
-            cache-update path stores prefetched K/V rows directly)."""
+            cache-update path stores prefetched K/V rows directly),
+            chunk-masked to the new rows' true width."""
             _count(1)
-            cp = pltpu.make_async_copy(
-                sP.at[slot, r, pl.ds(0, TN)],
-                heap.at[pl.ds(base, TN)], sem)
-            cp.start()
-            cp.wait()
+            chw = min(SCH_W, TN)
+            for j in range(-(-TN // chw)):
+                @pl.when(j * chw < jnp.asarray(valid))
+                def _(j=j):
+                    cp = pltpu.make_async_copy(
+                        sP.at[w_id, slot, r, pl.ds(j * chw, chw)],
+                        heap.at[pl.ds(base + j * chw, chw)], sem)
+                    cp.start()
+                    cp.wait()
 
         # ------------------------------------------------ prefetch phase
-        # Issue task t+1's primary operand tile into the B side.  The
-        # compiler emitted (off, ld, rows) at words 24-26 only when the
-        # tile does not overlap anything task t writes, so reading before
-        # this task's stores land is safe (that is the hazard analysis).
+        # Issue the NEXT task in this worker's stream into the B side of
+        # this worker's double buffer.  The compiler emitted (off, ld,
+        # rows) at words 24-26 only when the tile does not overlap
+        # anything any worker writes in this or the next step, so reading
+        # before those stores land is safe (that is the hazard analysis).
         pf_rows = d(26)
 
         @pl.when(pf_rows > 0)
         def _():
             _count(pf_rows)
-            cnt[0, 2] += 1.0
+            cadd(2, 1.0)
 
         def pf_body(i, _):
             @pl.when(i < pf_rows)
             def _():
                 pltpu.make_async_copy(
                     heap.at[pl.ds(d(24) + i * d(25), TN)],
-                    sP.at[nslot, i, pl.ds(0, TN)],
-                    psem.at[nslot]).start()
+                    sP.at[w_id, nslot, i, pl.ds(0, TN)],
+                    psem.at[w_id, nslot]).start()
             return 0
         jax.lax.fori_loop(0, TM, pf_body, 0)
+
+        # ------------------------------------------- event wait (word 32)
+        # Cross-worker producers synchronize through the in-heap event
+        # table.  The sequential interpret-mode order already satisfies
+        # every dependency, so the hardware spin-wait degrades to a
+        # checked assertion: the counter must ALREADY equal the trigger
+        # count; anything else is a compiler bug, counted as a violation.
+        @pl.when(d(32) >= 0)
+        def _():
+            cpw = pltpu.make_async_copy(
+                heap.at[pl.ds(EVENT_OFF + d(32), 1)],
+                sE.at[0, pl.ds(0, 1)], sem)
+            cpw.start()
+            cpw.wait()
+            cadd(5, 1.0)
+
+            @pl.when(sE[0, 0] != d(33).astype(jnp.float32))
+            def _():
+                cadd(6, 1.0)
 
         # ------------------------------------------------- compute phase
         def primary():
             """This task's primary operand tile as a (TM, TN) value:
             either the A side filled by the previous step's prefetch
-            (wait on the per-slot semaphore), or a demand bulk load when
-            no prefetch was possible.  Rows >= sp_rows are zeroed."""
+            (wait on the per-worker slot semaphore), or a demand bulk
+            load when no prefetch was possible.  Rows >= sp_rows are
+            zeroed."""
             rows = d(30)
 
             @pl.when(d(27) == 1)
-            def _():                     # prefetched at step t-1
+            def _():                     # prefetched at step s-1
                 def wbody(i, _):
                     @pl.when(i < rows)
                     def _():
                         pltpu.make_async_copy(
                             heap.at[pl.ds(d(28) + i * d(29), TN)],
-                            sP.at[slot, i, pl.ds(0, TN)],
-                            psem.at[slot]).wait()
+                            sP.at[w_id, slot, i, pl.ds(0, TN)],
+                            psem.at[w_id, slot]).wait()
                     return 0
                 jax.lax.fori_loop(0, TM, wbody, 0)
 
             @pl.when(jnp.logical_and(d(27) == 0, rows > 0))
             def _():                     # hazard or first task: demand load
                 _count(rows)
-                cnt[0, 3] += 1.0
+                cadd(3, 1.0)
 
                 def sbody(i, _):
                     @pl.when(i < rows)
                     def _():
                         pltpu.make_async_copy(
                             heap.at[pl.ds(d(28) + i * d(29), TN)],
-                            sP.at[slot, i, pl.ds(0, TN)],
-                            psem.at[slot]).start()
+                            sP.at[w_id, slot, i, pl.ds(0, TN)],
+                            psem.at[w_id, slot]).start()
                     return 0
                 jax.lax.fori_loop(0, TM, sbody, 0)
 
@@ -306,19 +399,19 @@ def make_megakernel(statics: Dict[str, Any], num_tasks: int,
                     def _():
                         pltpu.make_async_copy(
                             heap.at[pl.ds(d(28) + i * d(29), TN)],
-                            sP.at[slot, i, pl.ds(0, TN)],
-                            psem.at[slot]).wait()
+                            sP.at[w_id, slot, i, pl.ds(0, TN)],
+                            psem.at[w_id, slot]).wait()
                     return 0
                 jax.lax.fori_loop(0, TM, fbody, 0)
 
             def zbody(i, _):
                 @pl.when(i >= rows)
                 def _():
-                    sP[pl.ds(slot, 1), pl.ds(i, 1), :] = jnp.zeros(
-                        (1, 1, TN), jnp.float32)
+                    sP[pl.ds(w_id, 1), pl.ds(slot, 1), pl.ds(i, 1),
+                       :] = jnp.zeros((1, 1, 1, TN), jnp.float32)
                 return 0
             jax.lax.fori_loop(0, TM, zbody, 0)
-            return sP[pl.ds(slot, 1)][0]
+            return sP[pl.ds(w_id, 1), pl.ds(slot, 1)][0, 0]
 
         cols = jax.lax.iota(jnp.int32, TN)
 
@@ -353,7 +446,7 @@ def make_megakernel(statics: Dict[str, Any], num_tasks: int,
             y = y + sC[0, :][None, :]
             y = _act(y, d(14))
             acc[...] = y
-            store_tile(acc, d(4), d(5), m, TM, TN)
+            store_tile(acc, d(4), d(5), m, TM, TN, valid=n)
 
         def k_rmsnorm():
             m, n = d(1), d(2)
@@ -368,7 +461,7 @@ def make_megakernel(statics: Dict[str, Any], num_tasks: int,
             # keep pad columns zero (gemma's 1+w would leak 1·0=0 anyway)
             y = jnp.where(cols[None, :] < n, y, 0.0)
             acc[...] = y
-            store_tile(acc, d(4), d(5), m, TM, TN)
+            store_tile(acc, d(4), d(5), m, TM, TN, valid=n)
 
         def k_rope():
             m, n = d(1), d(2)
@@ -399,14 +492,14 @@ def make_megakernel(statics: Dict[str, Any], num_tasks: int,
                     [x1 * cosv - x2 * sinv, x2 * cosv + x1 * sinv], axis=1)
                 out = jax.lax.dynamic_update_slice(out, rot, (0, h * HD))
             acc[...] = out
-            store_tile(acc, d(4), d(5), m, TM, TN)
+            store_tile(acc, d(4), d(5), m, TM, TN, valid=n)
 
         def k_glu():
             m = d(1)
             pa = primary()
             load_tile(sD, d(8), d(9), m, TM, TN)
             acc[...] = _act(pa[:, :TN], d(14)) * sD[:TM, :TN]
-            store_tile(acc, d(4), d(5), m, TM, TN)
+            store_tile(acc, d(4), d(5), m, TM, TN, valid=d(2))
 
         def k_resid():
             m = d(1)
@@ -419,7 +512,7 @@ def make_megakernel(statics: Dict[str, Any], num_tasks: int,
             def _():
                 sD[:TM, :] = jnp.zeros((TM, TN), jnp.float32)
             acc[...] = y + sD[:TM, :TN]
-            store_tile(acc, d(4), d(5), m, TM, TN)
+            store_tile(acc, d(4), d(5), m, TM, TN, valid=d(2))
 
         def k_attn():
             m, n, s_len = d(1), d(2), d(3)
@@ -466,7 +559,8 @@ def make_megakernel(statics: Dict[str, Any], num_tasks: int,
                         row_out = jax.lax.dynamic_update_slice(
                             row_out, og, (gi * G * HD,))
                     acc[r, :] = row_out
-                    store_row_vec(acc, r, d(4) + r * d(5), TN)
+                    store_row_vec(acc, r, d(4) + r * d(5), TN,
+                                  valid=n)
 
         def k_cache_update():
             m = d(1)
@@ -476,7 +570,8 @@ def make_megakernel(statics: Dict[str, Any], num_tasks: int,
                 @pl.when(r < m)
                 def _(r=r):
                     seq = sC[0, r].astype(jnp.int32)
-                    store_primary_row(r, d(4) + r * d(15) + seq * d(5))
+                    store_primary_row(r, d(4) + r * d(15) + seq * d(5),
+                                      valid=d(2))
 
         def k_embed():
             m = d(1)
@@ -486,7 +581,8 @@ def make_megakernel(statics: Dict[str, Any], num_tasks: int,
                 def _(r=r):
                     tok = ids[0, r].astype(jnp.int32)
                     load_row(sA, r, d(8) + tok * d(9), TN)
-                    store_row_vec(sA, r, d(4) + r * d(5), TN)
+                    store_row_vec(sA, r, d(4) + r * d(5), TN,
+                                  valid=d(2))
 
         def k_softmax_topk():
             m, n = d(1), d(2)
@@ -504,7 +600,7 @@ def make_megakernel(statics: Dict[str, Any], num_tasks: int,
             w = jax.nn.softmax(vals, axis=1)                  # (TM, K)
             out = jnp.einsum("mek,mk->me", sel, w)
             acc[...] = out
-            store_tile(acc, d(4), d(5), m, TM, TN)
+            store_tile(acc, d(4), d(5), m, TM, TN, valid=n)
 
         def k_moe_gg():
             m, n, k = d(1), d(2), d(3)
@@ -537,7 +633,7 @@ def make_megakernel(statics: Dict[str, Any], num_tasks: int,
                           _act(acc[...], d(14)) * acc2[...],
                           acc[...])
             acc[...] = y
-            store_tile(acc, d(4), d(5), m, TM, TN)
+            store_tile(acc, d(4), d(5), m, TM, TN, valid=n)
 
         def k_moe_combine():
             m, n, n_exp = d(1), d(2), d(3)
@@ -549,7 +645,7 @@ def make_megakernel(statics: Dict[str, Any], num_tasks: int,
                 load_col(1, d(10) + e, d(11),
                          jnp.where(live, m, 0), TM)
                 acc[...] += sD[:TM, :TN] * sC[1, :TM][:, None]
-            store_tile(acc, d(4), d(5), m, TM, TN)
+            store_tile(acc, d(4), d(5), m, TM, TN, valid=n)
 
         def k_ssm():
             m = d(1)
@@ -587,7 +683,8 @@ def make_megakernel(statics: Dict[str, Any], num_tasks: int,
                         row_out = jax.lax.dynamic_update_slice(
                             row_out, y_h, (hh * HDS,))
                     acc[r, :] = row_out
-                    store_row_vec(acc, r, d(4) + r * d(5), TN)
+                    store_row_vec(acc, r, d(4) + r * d(5), TN,
+                                  valid=d(2))
 
         def k_conv():
             m = d(1)
@@ -610,9 +707,10 @@ def make_megakernel(statics: Dict[str, Any], num_tasks: int,
                     for j in range(WC):
                         sD[j, :] = rows[j]
                         y = y + rows[j] * sB[j, :TN]
-                    store_tile(sD, base, d(9), WC, WC, TN)
+                    store_tile(sD, base, d(9), WC, WC, TN, valid=d(2))
                     acc[r, :] = jax.nn.silu(y)
-                    store_row_vec(acc, r, d(4) + r * d(5), TN)
+                    store_row_vec(acc, r, d(4) + r * d(5), TN,
+                                  valid=d(2))
 
         jax.lax.switch(d(0), [
             k_noop, k_matmul, k_rmsnorm, k_rope, k_glu, k_resid, k_attn,
@@ -620,21 +718,43 @@ def make_megakernel(statics: Dict[str, Any], num_tasks: int,
             k_moe_combine, k_ssm, k_conv,
         ])
 
-        # flush the DMA counter block to its reserved heap slot — only the
-        # final grid step: the totals accumulate in scratch and nothing
-        # reads the heap copy mid-launch
-        @pl.when(t == num_tasks - 1)
+        # ----------------------------------------- event signal (word 34)
+        # After this task's stores have landed, increment its triggering
+        # event's in-heap counter (a read-modify-write through VMEM; on
+        # real parallel hardware this is the atomic the event table
+        # provides — interpret mode's sequential grid makes it exact).
+        @pl.when(d(34) >= 0)
         def _():
-            cp = pltpu.make_async_copy(
-                cnt.at[0, pl.ds(0, STATS_WORDS)],
-                heap.at[pl.ds(STATS_OFF, STATS_WORDS)], sem)
-            cp.start()
-            cp.wait()
+            cpi = pltpu.make_async_copy(
+                heap.at[pl.ds(EVENT_OFF + d(34), 1)],
+                sE.at[0, pl.ds(0, 1)], sem)
+            cpi.start()
+            cpi.wait()
+            sE[0, pl.ds(0, 1)] = sE[0, pl.ds(0, 1)] + 1.0
+            cpo = pltpu.make_async_copy(
+                sE.at[0, pl.ds(0, 1)],
+                heap.at[pl.ds(EVENT_OFF + d(34), 1)], sem)
+            cpo.start()
+            cpo.wait()
+            cadd(7, 1.0)
+
+        # flush the per-worker counter blocks to their reserved heap
+        # slots — only the final grid iteration: the totals accumulate in
+        # scratch and nothing reads the heap copy mid-launch
+        @pl.when(jnp.logical_and(s == num_steps - 1, w_id == W - 1))
+        def _():
+            for ww in range(W):
+                cp = pltpu.make_async_copy(
+                    cnt.at[ww, pl.ds(0, STATS_WORDS)],
+                    heap.at[pl.ds(STATS_OFF + ww * STATS_WORDS,
+                                  STATS_WORDS)], sem)
+                cp.start()
+                cp.wait()
 
     sd_rows = max(TM, TS, WC, 8)
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
-        grid=(num_tasks,),
+        grid=(num_steps, W),
         in_specs=[pl.BlockSpec(memory_space=pl.ANY)],
         out_specs=pl.BlockSpec(memory_space=pl.ANY),
         scratch_shapes=[
@@ -644,10 +764,12 @@ def make_megakernel(statics: Dict[str, Any], num_tasks: int,
             pltpu.VMEM((sd_rows, TN), jnp.float32),    # sD
             pltpu.VMEM((TM, TN), jnp.float32),         # acc
             pltpu.VMEM((TM, TN), jnp.float32),         # acc2
-            pltpu.VMEM((2, TM, TN), jnp.float32),      # sP (double buffer)
-            pltpu.VMEM((1, STATS_WORDS), jnp.float32),  # cnt (DMA counters)
+            pltpu.VMEM((W, 2, TM, TN), jnp.float32),   # sP (per-worker
+                                                       #     double buffer)
+            pltpu.VMEM((1, 8), jnp.float32),           # sE (event counter)
+            pltpu.VMEM((W, STATS_WORDS), jnp.float32),  # cnt (per-worker)
             pltpu.SemaphoreType.DMA,                   # sem (bulk tiles)
-            pltpu.SemaphoreType.DMA((2,)),             # psem (per pf slot)
+            pltpu.SemaphoreType.DMA((W, 2)),           # psem (worker, slot)
         ],
     )
     return functools.partial(

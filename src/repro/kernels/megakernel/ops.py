@@ -41,14 +41,17 @@ def compile_decode_megakernel(cfg, batch: int, max_seq: int,
                               *, max_rows: int = 8,
                               latency_aware: bool = True,
                               event_fusion: bool = True,
-                              pipeline_depth: int = 2
+                              pipeline_depth: int = 2,
+                              num_workers: int = 1
                               ) -> MegakernelPlan:
     """Lower cfg's decode step end-to-end: op graph → tGraph → descriptors.
 
     ``max_rows`` caps tile rows (the megakernel's TM) — decode batches are
     small, so row tiles stay register-friendly.  ``pipeline_depth`` is the
     separation the scheduler enforces between producer→consumer pairs
-    (2 = the kernel's double buffer).
+    (2 = the kernel's double buffer).  ``num_workers`` partitions the
+    schedule into W decentralized per-worker descriptor streams
+    synchronized through in-heap event counters (paper §5).
     """
     g = build_decode_graph(cfg, batch, max_seq)
     opts = CompileOptions(
@@ -56,6 +59,7 @@ def compile_decode_megakernel(cfg, batch: int, max_seq: int,
         latency_aware_schedule=latency_aware,
         event_fusion=event_fusion,
         pipeline_depth=pipeline_depth,
+        num_workers=num_workers,
     )
     compiled = megakernelize(g, opts)
     return lower_tgraph(compiled, cfg)
@@ -93,6 +97,13 @@ class MegakernelExecutor:
                     + np.arange(cols)[None, :])
             self._entries.append((name, slot.rows, cols))
             idx_parts.append(grid.ravel())
+        # the in-heap event-counter table is re-zeroed through the same
+        # per-step scatter (the kernel increments counters during the
+        # launch, so every launch starts from a clean table)
+        self._n_events = plan.num_events
+        if self._n_events:
+            idx_parts.append(np.arange(plan.event_offset,
+                                       plan.event_offset + self._n_events))
         self._upd_idx = jnp.asarray(
             np.concatenate(idx_parts).astype(np.int32))
         self._descs = jnp.asarray(plan.descs)
@@ -117,7 +128,7 @@ class MegakernelExecutor:
         self.state_scatter_count = 0
 
         # ---- the ONE kernel + the ONE jitted step ----
-        kern = make_megakernel(plan.statics, len(plan.compiled.order),
+        kern = make_megakernel(plan.statics, plan.num_steps,
                                plan.heap_size)
         lg = plan.layout["logits"]
         lg_cols = lg.shape[-1]
@@ -166,6 +177,8 @@ class MegakernelExecutor:
             vals["positions"] = pos
         flat = [np.asarray(vals[name], np.float32).reshape(rows * cols)
                 for name, rows, cols in self._entries]
+        if self._n_events:
+            flat.append(np.zeros((self._n_events,), np.float32))
         return jnp.asarray(np.concatenate(flat))
 
     # ------------------------------------------------------------- public
@@ -192,21 +205,46 @@ class MegakernelExecutor:
         self.step_count += 1
         return np.asarray(logits)
 
-    def pipeline_counters(self) -> Dict[str, int]:
-        """The kernel-maintained DMA counters for the LAST step, read
-        from the reserved stats block at the heap tail (the kernel
-        re-zeroes the block at grid step 0 of every launch): bulk tile
-        DMAs issued, row copies inside them (what the pre-pipelining
-        kernel issued as individual DMAs), prefetch tiles issued, and
-        primary tiles demand-loaded (pipeline misses)."""
-        assert self._heap is not None, "upload() before pipeline_counters()"
+    def worker_counters(self) -> List[Dict[str, int]]:
+        """Per-worker kernel counters for the LAST step, one dict per
+        worker lane, read from the reserved per-worker blocks at the heap
+        tail (each worker re-zeroes its block at grid step 0 of every
+        launch): bulk tile DMAs issued, row copies inside them (with the
+        2^20-unit spill word folded back in), prefetch tiles issued,
+        primary tiles demand-loaded (pipeline misses), event waits
+        checked, event-wait violations (a compiler bug if nonzero) and
+        event signals."""
+        assert self._heap is not None, "upload() before worker_counters()"
         off = self.plan.stats_offset
-        vals = np.asarray(self._heap[off : off + 5])
-        # word 4 is the 2^20-unit spill of the row count (f32 exactness)
-        return {"bulk_copies": int(vals[0]),
-                "row_copies": int(vals[1]) + (1 << 20) * int(vals[4]),
-                "prefetch_tiles": int(vals[2]),
-                "primary_fallbacks": int(vals[3])}
+        W = self.plan.num_workers
+        from .desc import STATS_WORDS
+        flat = np.asarray(self._heap[off : off + W * STATS_WORDS])
+        out: List[Dict[str, int]] = []
+        for w in range(W):
+            v = flat[w * STATS_WORDS : (w + 1) * STATS_WORDS]
+            out.append({
+                "bulk_copies": int(v[0]),
+                "row_copies": int(v[1]) + (1 << 20) * int(v[4]),
+                "prefetch_tiles": int(v[2]),
+                "primary_fallbacks": int(v[3]),
+                "event_waits": int(v[5]),
+                "event_wait_violations": int(v[6]),
+                "event_signals": int(v[7]),
+            })
+        return out
+
+    def pipeline_counters(self) -> Dict[str, int]:
+        """Kernel counters for the LAST step summed over the worker
+        lanes (see :meth:`worker_counters` for the per-worker blocks):
+        bulk tile DMAs issued, row copies inside them (what the
+        pre-pipelining kernel issued as individual DMAs), prefetch tiles
+        issued, primary tiles demand-loaded (pipeline misses), plus the
+        event-counter traffic of the W-worker runtime."""
+        per_worker = self.worker_counters()
+        keys = ("bulk_copies", "row_copies", "prefetch_tiles",
+                "primary_fallbacks", "event_waits",
+                "event_wait_violations", "event_signals")
+        return {k: sum(d[k] for d in per_worker) for k in keys}
 
     def read_heap(self) -> np.ndarray:
         """Host copy of the resident heap (state inspection / snapshots)."""

@@ -1,9 +1,31 @@
-"""Hardware model used for the roofline terms (TPU v5e-class chip)."""
+"""Hardware model used for the roofline terms (TPU v5e-class chip).
+
+This module is the single source of the hardware constants: the roofline
+analysis, the latency-aware scheduler / worker partitioner
+(``core/schedule.py``) and the runtime simulator (``core/runtime_sim.py``)
+all derive their peak-FLOPs / HBM-bandwidth terms from :data:`TPU_V5E`
+so the three can never drift apart.
+"""
 from __future__ import annotations
 
 import dataclasses
 
-__all__ = ["HW", "TPU_V5E"]
+__all__ = ["HW", "TPU_V5E", "WORKERS_PER_CHIP", "COMPUTE_LATENCY",
+           "TASK_OVERHEAD", "COMM_LATENCY", "AOT_EVENT_WAIT", "JIT_HOP"]
+
+#: SM/core-equivalent worker lanes one chip is modeled as (the paper's
+#: per-SM task granularity): each worker owns 1/Wth of the chip's peak
+#: FLOPs and HBM bandwidth in the scheduler's and simulator's cost model.
+WORKERS_PER_CHIP = 8
+
+#: runtime-model latency terms (seconds) — defined once here so the
+#: worker partitioner's cost model and ``runtime_sim.SimConfig`` cannot
+#: drift apart (the simulator must replay the compiler's exact schedule)
+COMPUTE_LATENCY = 0.25e-6    # VPU/MXU issue-latency floor per task
+TASK_OVERHEAD = 0.1e-6       # dequeue + descriptor decode
+COMM_LATENCY = 2.0e-6        # per-collective base latency (hops)
+AOT_EVENT_WAIT = 0.2e-6      # one in-heap event-counter wait (§5.2)
+JIT_HOP = 0.6e-6             # worker->scheduler->worker hop (§5.2)
 
 
 @dataclasses.dataclass(frozen=True)

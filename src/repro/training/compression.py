@@ -5,7 +5,8 @@ quantization residual is fed back into the next step's gradient (error
 feedback), which keeps SGD convergence (Karimireddy et al., 2019).  In the
 multi-pod mesh this halves-to-quarters the *cross-pod* gradient traffic —
 the slowest hop — while the pod-local reduction stays full precision
-(hierarchical reduction, see DESIGN.md §5).
+(hierarchical reduction; see the sharding notes in README.md and the
+communication-overlap sections of PAPER.md).
 """
 from __future__ import annotations
 

@@ -76,8 +76,9 @@ def test_single_launch_property():
     prog = compile_decode_megakernel(cfg, 2, 16)
     assert prog.descs.shape[0] == len(prog.compiled.order)
     # descriptor table is the fixed-size uniform representation (paper §4;
-    # words 24-31 carry the software-pipelining prefetch plan)
-    assert prog.descs.shape[1] == DESC_WORDS == 32
+    # words 24-31 carry the software-pipelining prefetch plan, words
+    # 32-35 the event-counter wait/signal of the multi-worker runtime)
+    assert prog.descs.shape[1] == DESC_WORDS == 36
     # in-place state aliasing: cache2 shares the cache's heap slot
     lay = prog.layout
     assert lay["L0.k_cache2"].offset == lay["L0.k_cache"].offset
