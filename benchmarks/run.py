@@ -18,6 +18,7 @@ SECTIONS = [
     "fig12_pipelining",
     "fig13_overlap",
     "fig14_worker_scaling",
+    "fig15_dyn_sched",
     "launch_reduction",
     "serving_load",
     "roofline_table",

@@ -101,12 +101,14 @@ class Program:
 
     def __init__(self, cfg, batch: int, max_seq: int,
                  step_cache: Optional[Dict[tuple, Callable]] = None,
-                 pipeline_depth: int = 2, num_workers: int = 1):
+                 pipeline_depth: int = 2, num_workers: int = 1,
+                 scheduler: str = "static"):
         self.cfg = cfg
         self.batch = batch
         self.max_seq = max_seq
         self.pipeline_depth = pipeline_depth
         self.num_workers = num_workers
+        self.scheduler = scheduler
         self.step_count = 0
         # (cfg, width)-keyed jitted prefill fns; pass a shared dict to
         # reuse compiled steps across programs/engines (benchmark warmup)
@@ -115,6 +117,7 @@ class Program:
         self._params: Any = None
         self._params_dev: Any = None   # jnp mirror for the prefill path
         self._compiled: Optional[CompiledTGraph] = None
+        self._dyn_stats_cache: Optional[Dict[str, Any]] = None
 
     # ----------------------------------------------------------- lifecycle
     def bind(self, params) -> "Program":
@@ -191,7 +194,8 @@ class Program:
             g = build_decode_graph(self.cfg, self.batch, self.max_seq)
             self._compiled = megakernelize(g, CompileOptions(
                 pipeline_depth=self.pipeline_depth,
-                num_workers=self.num_workers))
+                num_workers=self.num_workers,
+                scheduler=self.scheduler))
         return self._compiled
 
     @property
@@ -219,14 +223,18 @@ class Program:
         """The W-worker schedule→runtime contract: the compiler's worker
         partition (queue lengths, cross-worker event cut) plus the
         simulator's replay of that exact partition (makespan, per-worker
-        utilization).  The megakernel backend extends this with the
-        kernel's own per-worker DMA/event counters after a step."""
+        utilization).  Under ``scheduler="dynamic"`` the dynamic
+        scheduler's own numbers are added: the event-driven ``mpk_dyn``
+        makespan and the protocol replay's queue-depth / pop-source
+        profile.  The megakernel backend extends this with the kernel's
+        own per-worker DMA/event/queue counters after a step."""
         from ..core.runtime_sim import SimConfig, simulate
         part = self.compiled.partition
         res = simulate(self.compiled,
                        SimConfig(mode="mpk", n_workers=part.requested_workers,
                                  pipeline_depth=self.pipeline_depth))
-        return {
+        out = {
+            "scheduler": self.scheduler,
             "num_workers": part.num_workers,
             "requested_workers": part.requested_workers,
             "queue_lens": [len(q) for q in part.queues],
@@ -235,6 +243,36 @@ class Program:
             "sim_makespan_us": res.makespan * 1e6,
             "worker_utilization": list(res.worker_busy or []),
         }
+        if self.scheduler == "dynamic":
+            out.update(self._dyn_sched_stats())
+        return out
+
+    def _dyn_sched_stats(self) -> Dict[str, Any]:
+        """The dynamic scheduler's static numbers (protocol replay +
+        ``mpk_dyn`` simulation), computed once per program — they only
+        depend on the compiled plan, and the replay is O(tasks × pool
+        scan) python."""
+        if getattr(self, "_dyn_stats_cache", None) is None:
+            from ..core.runtime_sim import SimConfig, simulate
+            from ..runtime.dyn_sched import (build_dyn_sched,
+                                             replay_sequential)
+            part = self.compiled.partition
+            dres = simulate(self.compiled,
+                            SimConfig(mode="mpk_dyn",
+                                      n_workers=part.requested_workers,
+                                      pipeline_depth=self.pipeline_depth))
+            dyn = getattr(getattr(self, "plan", None), "dyn", None)
+            if dyn is None:
+                dyn = build_dyn_sched(self.compiled)
+            tr = replay_sequential(dyn)
+            self._dyn_stats_cache = {
+                "dyn_sim_makespan_us": dres.makespan * 1e6,
+                "queue_max_depth": tr.max_depth,
+                "replay_pops_own": tr.pops_own,
+                "replay_pops_overflow": tr.pops_overflow,
+                "replay_steals": tr.steals,
+            }
+        return self._dyn_stats_cache
 
     def describe(self) -> Dict[str, Any]:
         c = self.compiled
@@ -263,9 +301,10 @@ class JaxProgram(Program):
     backend = "jax"
 
     def __init__(self, cfg, batch, max_seq, step_cache=None,
-                 pipeline_depth: int = 2, num_workers: int = 1):
+                 pipeline_depth: int = 2, num_workers: int = 1,
+                 scheduler: str = "static"):
         super().__init__(cfg, batch, max_seq, step_cache, pipeline_depth,
-                         num_workers)
+                         num_workers, scheduler)
         self._cache = None
         # donated slot zeroing: no full-cache copy per admission
         self._jreset = jax.jit(
@@ -321,7 +360,8 @@ class InterpreterProgram(Program):
                  options: Optional[CompileOptions] = None, tp: int = 1):
         super().__init__(cfg, batch, max_seq, step_cache,
                          options.pipeline_depth if options else 2,
-                         options.num_workers if options else 1)
+                         options.num_workers if options else 1,
+                         options.scheduler if options else "static")
         g = build_decode_graph(cfg, batch, max_seq, tp=tp)
         t0 = time.perf_counter()
         self._compiled = megakernelize(g, options)
@@ -329,6 +369,15 @@ class InterpreterProgram(Program):
         self._compiled.stats["compile_wall_s"] = time.perf_counter() - t0
         self._smap = _state_map(cfg)
         self._cache = None
+        # dynamic scheduler: execute in the protocol-replay order (one
+        # legal execution of the ready-queue runtime — bitwise-identical
+        # results prove order-independence of the compiled tasks)
+        self._dyn_order = None
+        if self.scheduler == "dynamic":
+            from ..runtime.dyn_sched import (build_dyn_sched,
+                                             replay_sequential)
+            dyn = build_dyn_sched(self._compiled)
+            self._dyn_order = replay_sequential(dyn).task_order(dyn)
 
     def bind(self, params) -> "Program":
         self._params = _np_tree(params)
@@ -355,7 +404,7 @@ class InterpreterProgram(Program):
         assert self._params is not None, "bind() first"
         binds = decode_bindings(self.cfg, self._params, self._cache,
                                 tokens_or_embeds, seq_lens, positions)
-        out = execute_tgraph(self._compiled, binds)
+        out = execute_tgraph(self._compiled, binds, order=self._dyn_order)
         for ent in self._smap:  # fold updated state back into the pytree
             leaf = self._cache[ent["key"]]
             leaf[ent["blk"], ent["idx"]] = np.asarray(
@@ -375,16 +424,17 @@ class PallasProgram(Program):
     def __init__(self, cfg, batch, max_seq, step_cache=None, *,
                  max_rows: int = 8, latency_aware: bool = True,
                  event_fusion: bool = True, pipeline_depth: int = 2,
-                 num_workers: int = 1):
+                 num_workers: int = 1, scheduler: str = "static"):
         super().__init__(cfg, batch, max_seq, step_cache, pipeline_depth,
-                         num_workers)
+                         num_workers, scheduler)
         # late import keeps the api package importable without pallas
         from ..kernels.megakernel import (MegakernelExecutor,
                                           compile_decode_megakernel)
         self.plan = compile_decode_megakernel(
             cfg, batch, max_seq, max_rows=max_rows,
             latency_aware=latency_aware, event_fusion=event_fusion,
-            pipeline_depth=pipeline_depth, num_workers=num_workers)
+            pipeline_depth=pipeline_depth, num_workers=num_workers,
+            scheduler=scheduler)
         self._compiled = self.plan.compiled
         self.executor = MegakernelExecutor(self.plan, cfg)
         self._smap = _state_map(cfg)
@@ -414,7 +464,9 @@ class PallasProgram(Program):
     def worker_stats(self) -> Dict[str, Any]:
         """Simulator-side partition stats plus — after a step — the
         kernel's live per-worker DMA/event counters (the decentralized
-        runtime's own accounting, read from the heap stats blocks)."""
+        runtime's own accounting, read from the heap stats blocks).
+        Under the dynamic scheduler the in-heap queue cursors and
+        pop-source counters are merged in too."""
         out = dict(Program.worker_stats.fget(self))
         if self.step_count > 0:
             per_worker = self.executor.worker_counters()
@@ -422,6 +474,9 @@ class PallasProgram(Program):
             for k in ("event_waits", "event_wait_violations",
                       "event_signals"):
                 out[k] = sum(d[k] for d in per_worker)
+            if self.scheduler == "dynamic":
+                out.update({f"kernel_{k}": v for k, v in
+                            self.executor.scheduler_counters().items()})
         return out
 
     def bind(self, params) -> "Program":
@@ -491,7 +546,8 @@ def compile(cfg, batch: int, max_seq: int, backend: str = "jax", *,
             step_cache: Optional[Dict[tuple, Callable]] = None,
             max_rows: Optional[int] = None, latency_aware: bool = True,
             event_fusion: bool = True, pipeline_depth: int = 2,
-            num_workers: int = 1, tp: int = 1) -> Program:
+            num_workers: int = 1, scheduler: str = "static",
+            tp: int = 1) -> Program:
     """Compile ``cfg``'s decode step once; returns a stateful
     :class:`Program` for ``backend`` ("jax" | "interpreter" |
     "megakernel").
@@ -506,15 +562,23 @@ def compile(cfg, batch: int, max_seq: int, backend: str = "jax", *,
     the schedule onto W decentralized workers (per-worker descriptor
     streams + in-heap event counters on the megakernel; see
     ``Program.worker_stats`` — outputs are bitwise-identical across W),
-    ``tp`` inserts AllReduce ops (interpreter stats only).
-    ``step_cache`` shares (cfg, width)-keyed jitted prefill steps across
-    programs.
+    ``scheduler`` picks the runtime dispatch: ``"static"`` executes the
+    partition as lowered, ``"dynamic"`` dispatches from heap-resident
+    ready queues at execution time (pop → wait → compute →
+    signal-and-enqueue; outputs stay bitwise-identical to static —
+    the megakernel runs the in-kernel protocol, the interpreter executes
+    its sequential replay, the jax oracle is unaffected), ``tp`` inserts
+    AllReduce ops (interpreter stats only).  ``step_cache`` shares
+    (cfg, width)-keyed jitted prefill steps across programs.
     """
     if backend not in _BACKEND_CLASSES:
         raise ValueError(
             f"unknown backend {backend!r}; expected one of {BACKENDS}")
     if num_workers < 1:
         raise ValueError(f"num_workers must be >= 1, got {num_workers}")
+    if scheduler not in ("static", "dynamic"):
+        raise ValueError(f"unknown scheduler {scheduler!r}; "
+                         "expected 'static' or 'dynamic'")
     if backend == "interpreter":
         dec = (DecomposeConfig() if max_rows is None
                else DecomposeConfig(max_rows=max_rows))
@@ -523,7 +587,8 @@ def compile(cfg, batch: int, max_seq: int, backend: str = "jax", *,
             latency_aware_schedule=latency_aware,
             event_fusion=event_fusion,
             pipeline_depth=pipeline_depth,
-            num_workers=num_workers)
+            num_workers=num_workers,
+            scheduler=scheduler)
         return InterpreterProgram(cfg, batch, max_seq, step_cache,
                                   options=opts, tp=tp)
     if tp != 1:
@@ -535,7 +600,8 @@ def compile(cfg, batch: int, max_seq: int, backend: str = "jax", *,
                              latency_aware=latency_aware,
                              event_fusion=event_fusion,
                              pipeline_depth=pipeline_depth,
-                             num_workers=num_workers)
+                             num_workers=num_workers,
+                             scheduler=scheduler)
     return JaxProgram(cfg, batch, max_seq, step_cache,
                       pipeline_depth=pipeline_depth,
-                      num_workers=num_workers)
+                      num_workers=num_workers, scheduler=scheduler)

@@ -284,6 +284,17 @@ def _task_cost(g: ComputationGraph, op: OpNode, out_r: Region) -> Tuple[int, int
     if k == OpKind.SSM_UPDATE:
         n = g.spec(op.inputs[1]).shape[3]
         return 6 * rows * cols * n, 4 * rows * cols * n
+    if k == OpKind.CACHE_UPDATE:
+        # the task writes ONE new K/V row per batch slot at its seq_len
+        # (plus reads the incoming projection row); its aliased out
+        # region spans the whole cache for dependency purposes, but the
+        # traffic is O(rows × kv_width) — independent of cache length
+        # (charging 2·out_r.size here made a decode step look like it
+        # rewrote the entire cache, drowning every other cost at long
+        # context)
+        width = out_r.shape[-1] if out_r.ndim >= 2 else 1
+        nbytes = 2 * rows * width
+        return 2 * rows * width, 3 * nbytes
     nbytes = 2 * out_r.size
     return 2 * out_r.size, 3 * nbytes
 

@@ -19,25 +19,44 @@ execution models:
                   megakernel really executes,
   mpk_coarse    — event-driven execution with operator-granularity events
                   (Fig. 5c), the compute–communication-overlap ablation
-                  of Fig. 13.
+                  of Fig. 13,
+  mpk_dyn       — the decentralized *dynamic* scheduler
+                  (``runtime/dyn_sched.py``): workers pop ready tasks
+                  from heap-resident queues (own pool → shared overflow
+                  → stealing), event-counter triggers enqueue newly-
+                  ready consumers at runtime.  Charges match the mpk
+                  replay task for task (same pipelined costs, same
+                  cross-worker event waits, the same demand-load stall
+                  rule applied to pop gaps), so mpk vs mpk_dyn isolates
+                  exactly what runtime dispatch buys.
 
 Per-task time = max(flops/worker_flops, bytes/worker_bw) + task_overhead;
 comm-task time = bytes/ici_bw.  Hardware constants come from
 ``roofline/hw.py`` (the TPU-v5e-class chip of the roofline analysis) so
 roofline, scheduler and simulator share one source of truth.
+
+**Skewed-cost model** (``SimConfig.kv_lens``): per-batch-slot live KV
+lengths scale every ATTENTION_DECODE task's cost by
+``mean(kv_lens[rows]) / max(kv_lens)`` — the nominal roofline cost
+assumes every slot reads the full cache, so a ragged decode batch makes
+some attention tiles proportionally cheaper.  The static partition was
+balanced for uniform costs and cannot react; the dynamic scheduler
+rebalances by construction.  ``fig15_dyn_sched.py`` sweeps this.
 """
 from __future__ import annotations
 
 import dataclasses
 import heapq
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Sequence
 
 from ..roofline.hw import (AOT_EVENT_WAIT, COMM_LATENCY, COMPUTE_LATENCY,
                            JIT_HOP, TASK_OVERHEAD, TPU_V5E, WORKERS_PER_CHIP)
 from .compile import CompiledTGraph
+from .graph import OpKind
 from .schedule import partition_workers, replay_partition
 
-__all__ = ["SimConfig", "SimResult", "simulate"]
+__all__ = ["SimConfig", "SimResult", "simulate", "skewed_time_fn",
+           "ragged_kv_lens"]
 
 
 @dataclasses.dataclass
@@ -53,8 +72,12 @@ class SimConfig:
     jit_hop: float = JIT_HOP          # worker->scheduler->worker (§5.2)
     aot_wait: float = AOT_EVENT_WAIT  # one event wait
     launch_overhead: float = 3.8e-6  # per-kernel launch (paper §6.6)
-    mode: str = "mpk"                # kernel_per_op | mpk | mpk_coarse
+    mode: str = "mpk"          # kernel_per_op | mpk | mpk_coarse | mpk_dyn
     overlap_comm: bool = True
+    #: per-batch-slot live KV lengths (ragged decode): scales attention
+    #: task costs by mean(kv_lens[task rows]) / max(kv_lens); None =
+    #: uniform (every slot at the nominal full-cache cost)
+    kv_lens: Optional[Sequence[int]] = None
     #: model cross-task software pipelining (paper §5 / Fig. 12): a task's
     #: operand loads overlap the previous task's compute, so per-task time
     #: is max(load, compute) instead of load + compute — EXCEPT for tasks
@@ -63,6 +86,11 @@ class SimConfig:
     #: ``pipelined=False`` is the per-row synchronous-copy baseline.
     pipelined: bool = True
     pipeline_depth: int = 2
+    #: extra per-pop cost of the dynamic scheduler (mode="mpk_dyn").
+    #: Default 0: the queue-head pop-ahead hides the dequeue behind the
+    #: previous task's compute exactly as descriptor prefetch hides the
+    #: static stream's decode — set > 0 for sensitivity analysis.
+    queue_overhead: float = 0.0
 
 
 @dataclasses.dataclass
@@ -94,6 +122,42 @@ def _task_time(task, cfg: SimConfig, stalled: bool = False,
         return core if in_kernel else core + cfg.task_overhead
     # serialized decode-then-load-then-compute (the per-row-copy kernel)
     return load + comp + cfg.task_overhead
+
+
+def ragged_kv_lens(batch: int, max_seq: int, skew: float) -> List[int]:
+    """A ragged decode batch with skew factor ``skew``: per-slot live KV
+    lengths ramping linearly from ``max_seq`` (slot 0) down to
+    ``max_seq / skew`` (last slot).  ``skew=1`` is the uniform batch."""
+    assert skew >= 1.0 and batch >= 1
+    if batch == 1:
+        return [max_seq]
+    lo = max_seq / skew
+    return [max(1, round(max_seq - (max_seq - lo) * i / (batch - 1)))
+            for i in range(batch)]
+
+
+def skewed_time_fn(base_fn, kv_lens: Sequence[int]):
+    """Wrap a ``time_fn(task, stalled)`` with the ragged-decode cost
+    model: an ATTENTION_DECODE task covering batch rows ``[r0, r0+m)``
+    costs ``mean(kv_lens[r0:r0+m]) / max(kv_lens)`` of its nominal time
+    (the nominal roofline cost reads the full cache for every slot).
+    Non-attention tasks are unchanged, so the skew isolates exactly the
+    raggedness the paper's dynamic scheduler absorbs."""
+    kv = list(kv_lens)
+    ref = max(kv) if kv else 1
+
+    def fn(task, stalled):
+        t = base_fn(task, stalled)
+        if task.kind == OpKind.ATTENTION_DECODE and ref > 0:
+            region = next(iter(task.out_regions.values()), None)
+            if region is not None:
+                r0 = region.starts[0]
+                m = max(1, region.shape[0])
+                rows = [kv[min(r, len(kv) - 1)]
+                        for r in range(r0, r0 + m)]
+                t = t * (sum(rows) / len(rows)) / ref
+        return t
+    return fn
 
 
 def simulate(compiled: CompiledTGraph,
@@ -131,7 +195,7 @@ def simulate(compiled: CompiledTGraph,
                          sum(1 for x in tg.tasks.values() if x.is_comm),
                          len(per_op))
 
-    if cfg.mode == "mpk":
+    if cfg.mode in ("mpk", "mpk_dyn"):
         # ---- replay the compiler's worker partition (paper §5) ----
         # The partition IS the schedule the megakernel executes: static
         # per-worker queues cut out of the linearized order, synchronized
@@ -141,7 +205,7 @@ def simulate(compiled: CompiledTGraph,
         # an ad-hoc greedy lane assignment.
         part = compiled.partition
 
-        def time_fn(task, is_stalled):
+        def base_time_fn(task, is_stalled):
             return _task_time(task, cfg, is_stalled)
 
         def wait_fn(task):
@@ -149,17 +213,45 @@ def simulate(compiled: CompiledTGraph,
                     else cfg.aot_wait)
 
         if part is None or part.requested_workers != cfg.n_workers:
+            # the partitioner always balances for the NOMINAL (uniform)
+            # costs — compile time cannot predict runtime raggedness,
+            # which is exactly what mpk vs mpk_dyn measures under skew
             part = partition_workers(tg, compiled.lin, cfg.n_workers,
                                      cfg.pipeline_depth,
-                                     time_fn=time_fn, wait_fn=wait_fn,
+                                     time_fn=base_time_fn,
+                                     wait_fn=wait_fn,
                                      overlap_comm=cfg.overlap_comm,
                                      n_dma=cfg.n_dma)
+        time_fn = (skewed_time_fn(base_time_fn, cfg.kv_lens)
+                   if cfg.kv_lens is not None else base_time_fn)
+        width = max(1, part.num_workers)
+
+        if cfg.mode == "mpk_dyn":
+            # ---- decentralized dynamic scheduler (ready queues) ----
+            from ..runtime.dyn_sched import build_dyn_sched, simulate_dynamic
+            dyn = build_dyn_sched(compiled, part)
+            tasks = [tg.tasks[tid] for tid in compiled.order]
+            dres = simulate_dynamic(
+                dyn, tasks, time_fn, wait_fn,
+                queue_overhead=cfg.queue_overhead,
+                pipeline_depth=(cfg.pipeline_depth if cfg.pipelined
+                                else 1),
+                overlap_comm=cfg.overlap_comm, n_dma=cfg.n_dma)
+            makespan = dres.makespan
+            return SimResult(
+                makespan,
+                sum(dres.busy) / (makespan * width + 1e-30),
+                sum(1 for x in tg.tasks.values() if not x.is_dummy),
+                sum(1 for x in tg.tasks.values() if x.is_comm),
+                1,
+                worker_busy=[b / max(makespan, 1e-30)
+                             for b in dres.busy])
+
         res = replay_partition(
             tg, part.queues, part.step_of, time_fn=time_fn,
             wait_fn=wait_fn,
             pipeline_depth=cfg.pipeline_depth if cfg.pipelined else 1,
             overlap_comm=cfg.overlap_comm, n_dma=cfg.n_dma)
-        width = max(1, part.num_workers)
         makespan = res.makespan
         return SimResult(
             makespan,

@@ -1,10 +1,10 @@
 """Megakernel lowering: CompiledTGraph → (heap layout, task descriptors).
 
 This is the TPU analogue of MPK's task-description generation (§4.2 /
-§5.3): every task becomes a fixed-size int32 descriptor (24 words ≈ the
-paper's 352-byte descriptions), prefetched into SMEM via Pallas scalar
-prefetch before the grid step executes — the direct analogue of the
-paper's task-description prefetching.
+§5.3): every task becomes a fixed-size int32 descriptor (``DESC_WORDS``
+= 36 words ≈ the paper's 352-byte descriptions), prefetched into SMEM
+via Pallas scalar prefetch before the grid step executes — the direct
+analogue of the paper's task-description prefetching.
 
 Heap: one flat f32 buffer holding every graph tensor.  A tensor of shape
 ``(..., cols)`` is stored as ``rows = prod(shape[:-1])`` rows with padded
@@ -57,7 +57,9 @@ covered by an event counter resident in the heap at ``event_offset``
      stats block (a compiler bug, asserted zero by the tests).
   34 sig_ev    event-table index this task increments after its stores
      land, -1 if no consumer waits on it.
-  35 reserved
+  35 affinity  (dynamic scheduler only) the worker pool newly-ready
+     tasks are enqueued onto — the static partition's ``worker_of``
+     placement hint; reserved (0) under the static scheduler.
 
 Every prefetch row copy is TN elements wide: row-slot padding
 (``ld >= cols + TN``) guarantees a TN-wide read from any legal element
@@ -76,6 +78,33 @@ at ``event_offset``) followed by a per-worker ``STATS_WORDS``-sized DMA/
 event counter block (written by the kernel itself, read back via
 ``MegakernelExecutor.pipeline_counters()`` / ``worker_counters()``) at
 ``stats_offset``.
+
+Dynamic scheduler (``scheduler="dynamic"``, see
+``runtime/dyn_sched.py`` — the protocol's source of truth): the
+descriptor table becomes **schedule-order-free** — one flat row per
+linearized task (row id == linearized position, no step padding), each
+carrying its event wait/signal words (32-34, emitted for EVERY event,
+not just the cross-worker cut) and its affinity worker (35).  The grid
+is ``(ceil(T / W), W)`` pop slots; which task a slot runs is decided at
+execution time by the in-heap ready queues.  Between the event table
+and the stats blocks the heap gains:
+
+  ``queue_offset``   W per-worker ready pools (``QUEUE_CAP`` = 128 f32
+                     words each: a descriptor-row id, or ``QUEUE_EMPTY``)
+                     followed by the shared overflow queue
+                     (``dyn.overflow_cap`` words),
+  ``qc_offset``      per-pool [pushed, popped] cursor counters
+                     (2 × (W + 1) words, pushed pre-charged with the
+                     initial ready image),
+  ``trace_offset``   the pop trace: one word per grid slot recording
+                     the popped row id (``QUEUE_EMPTY`` for idle slots)
+                     — asserted equal to ``dyn_sched.replay_sequential``
+                     by the tests.
+
+The executor re-writes the initial queue image, cursor counters and
+event zeros through the per-step scatter before every launch; the
+consumer lists live in a second scalar-prefetch operand
+(``DynSchedPlan.sched_table()``).
 """
 from __future__ import annotations
 
@@ -101,8 +130,11 @@ DESC_WORDS = 36
 #: kernel-maintained counters: [0] bulk tile DMAs, [1] row copies inside
 #: them, [2] prefetch tiles issued, [3] primary tiles demand-loaded
 #: (pipeline misses), [4] 2^20-unit spill of [1], [5] event waits
-#: checked, [6] event-wait violations (must stay 0), [7] event signals
-STATS_WORDS = 8
+#: checked, [6] event-wait violations (must stay 0), [7] event signals,
+#: and — dynamic scheduler only, zero under static — [8] pops from the
+#: worker's own pool, [9] pops from the shared overflow queue,
+#: [10] steals from other workers' pools, [11] idle grid slots
+STATS_WORDS = 12
 
 KIND_CODES = {
     "noop": 0,
@@ -176,8 +208,21 @@ class MegakernelPlan:
     #: heap offset of the event-counter table (one f32 word per event)
     event_offset: int = 0
     #: number of in-heap event counters (0 when W == 1: program order
-    #: covers every dependency, no cross-worker cut exists)
+    #: covers every dependency, no cross-worker cut exists).  Under the
+    #: dynamic scheduler EVERY event with producers and consumers gets a
+    #: counter — the counters ARE the dispatch mechanism.
     num_events: int = 0
+    #: "static" (per-worker descriptor streams, PR 4) or "dynamic"
+    #: (heap-resident ready queues, ``runtime/dyn_sched.py``)
+    scheduler: str = "static"
+    #: the dynamic-scheduler plan (None under the static scheduler)
+    dyn: Any = None
+    #: heap offset of the ready pools (+ overflow queue right after)
+    queue_offset: int = 0
+    #: heap offset of the per-pool [pushed, popped] cursor counters
+    qc_offset: int = 0
+    #: heap offset of the pop trace (one word per grid slot)
+    trace_offset: int = 0
 
     # ------------------------------------------------- pipeline contract
     def pipeline_stats(self) -> Dict[str, Any]:
@@ -431,7 +476,11 @@ def _build_layout(compiled: CompiledTGraph, tn: int
 
 
 def lower_tgraph(compiled: CompiledTGraph, cfg,
-                 tn: Optional[int] = None) -> MegakernelPlan:
+                 tn: Optional[int] = None,
+                 scheduler: str = "static") -> MegakernelPlan:
+    if scheduler not in ("static", "dynamic"):
+        raise ValueError(f"unknown scheduler {scheduler!r}; "
+                         "expected 'static' or 'dynamic'")
     g = compiled.graph
     tg = compiled.tg
 
@@ -667,12 +716,17 @@ def lower_tgraph(compiled: CompiledTGraph, cfg,
             k_max = max(k_max, int(descs[mask, 3].max(initial=1)))
     statics["TK"] = _align(max(statics["TK"], k_max))
 
-    # ---- scatter the task table onto the (step, worker) grid ----
     part = compiled.partition
     if part is None:                   # compiled by an older pipeline
         from ...core.schedule import partition_workers
         part = partition_workers(tg, compiled.lin, 1)
         compiled.partition = part
+
+    if scheduler == "dynamic":
+        return _lower_dynamic(compiled, cfg, descs, layout, heap_size,
+                              statics, part)
+
+    # ---- scatter the task table onto the (step, worker) grid ----
     W = part.num_workers
     num_steps = part.num_steps
     grid = np.zeros((num_steps * W, DESC_WORDS), np.int32)
@@ -697,3 +751,58 @@ def lower_tgraph(compiled: CompiledTGraph, cfg,
     return MegakernelPlan(compiled, grid, layout, heap_size, statics,
                           stats_offset, W, num_steps, event_offset,
                           num_events)
+
+
+def _lower_dynamic(compiled: CompiledTGraph, cfg, descs: np.ndarray,
+                   layout: Dict[str, TensorSlot], heap_size: int,
+                   statics: Dict[str, Any], part) -> MegakernelPlan:
+    """Finish the lowering for ``scheduler="dynamic"``: keep the flat
+    per-task table in linearized order (row id == lin position — the pop
+    priority), stamp every row's event wait/signal words + affinity, and
+    append the ready-queue regions to the heap.  No prefetch plan: which
+    task a slot runs is a runtime decision, so every task demand-loads
+    its primary tile through its own record (words 28-30) — the cost the
+    ``mpk_dyn`` simulator charges as the per-pop queue overhead."""
+    from ...runtime.dyn_sched import QUEUE_CAP, build_dyn_sched
+
+    dyn = build_dyn_sched(compiled, part)
+    W = dyn.num_workers
+    T = dyn.num_tasks
+    assert descs.shape[0] == T
+
+    for row in range(T):
+        rec = _primary_record(descs[row])
+        if rec is not None:
+            descs[row, 28:31] = rec
+        descs[row, 35] = dyn.affinity[row]
+        e = int(dyn.wait_ev[row])
+        if e >= 0:
+            descs[row, 32] = e
+            descs[row, 33] = dyn.trigger[e]
+        descs[row, 34] = dyn.sig_ev[row]
+
+    num_steps = -(-T // W)             # pop slots per worker lane
+    event_offset = heap_size
+    heap_size += dyn.num_events
+    queue_offset = heap_size
+    heap_size += W * QUEUE_CAP + dyn.overflow_cap
+    qc_offset = heap_size
+    heap_size += 2 * (W + 1)
+    trace_offset = heap_size
+    heap_size += num_steps * W
+    stats_offset = heap_size
+    heap_size += STATS_WORDS * W
+
+    statics.update({
+        "W": W, "NUM_STEPS": num_steps, "EVENT_OFF": event_offset,
+        "N_EVENTS": dyn.num_events, "STATS_OFF": stats_offset,
+        "DYN": 1, "QOFF": queue_offset, "QCAP": QUEUE_CAP,
+        "OV_ROWS": dyn.overflow_cap // QUEUE_CAP, "QC_OFF": qc_offset,
+        "TRACE_OFF": trace_offset, "T_TASKS": T,
+        "MAX_OUT": dyn.max_out,
+    })
+    return MegakernelPlan(compiled, descs, layout, heap_size, statics,
+                          stats_offset, W, num_steps, event_offset,
+                          dyn.num_events, scheduler="dynamic", dyn=dyn,
+                          queue_offset=queue_offset, qc_offset=qc_offset,
+                          trace_offset=trace_offset)

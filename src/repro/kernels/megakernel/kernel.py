@@ -1,5 +1,7 @@
 """The persistent megakernel: one ``pl.pallas_call`` executes an entire
-compiled tGraph as W decentralized per-worker task streams.
+compiled tGraph as W decentralized per-worker task streams — statically
+partitioned (``scheduler="static"``) or dispatched at runtime from
+heap-resident ready queues (``scheduler="dynamic"``).
 
 TPU adaptation of MPK's in-kernel runtime (paper §5): the grid is 2-D
 ``(step, worker)`` — each worker walks its own static descriptor stream
@@ -51,9 +53,31 @@ A per-worker counter block (``STATS_WORDS`` f32 words per worker at
 itself: [0] bulk tile DMAs issued, [1] row copies inside them (what the
 pre-pipelining kernel issued as individual DMAs), [2] prefetch tiles
 issued, [3] primary tiles demand-loaded, [5] event waits checked,
-[6] event-wait violations, [7] event signals.
+[6] event-wait violations, [7] event signals, [8-11] dynamic-scheduler
+pops (own pool / overflow / steals / idle slots).
 ``MegakernelExecutor.pipeline_counters()`` / ``worker_counters()`` read
 it back.
+
+Dynamic scheduler (``statics["DYN"] == 1``; protocol in
+``runtime/dyn_sched.py``): each grid slot runs **pop → wait-check →
+compute → signal-and-enqueue** instead of walking a static stream.  The
+pop scans this worker's 128-word ready pool (one bulk row DMA + a VPU
+argmin — the minimum descriptor-row id wins, making the pop priority
+"earliest linearized position" with the task-id tie-break inherent),
+falling back to the shared overflow queue and then to *stealing* from
+the other workers' pools.  The popped row indexes the schedule-order-
+free descriptor table dynamically (scalar-prefetched SMEM).  After the
+task's stores land, the signal RMW increments its event counter; the
+producer that brings it to the trigger count walks the event's consumer
+list (the second scalar-prefetch operand) and pushes each newly-ready
+row into its affinity worker's pool (first empty slot, overflow when
+full).  Every slot also records what it popped into the in-heap pop
+trace, which the tests assert equal to ``dyn_sched.replay_sequential``
+— the sequential interpret-mode execution *is* the protocol replay, so
+dynamic outputs stay bitwise-identical to the static scheduler and the
+interpreter.  No cross-slot prefetch is planned (the next task is a
+runtime decision): every task demand-loads its primary tile through its
+own record, words 28-30.
 
 Validated in interpret mode against the numpy tGraph interpreter and the
 JAX model oracle (tests/test_megakernel.py, tests/test_program_api.py,
@@ -70,9 +94,14 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from ...runtime.dyn_sched import QUEUE_EMPTY
 from .desc import DESC_WORDS, STATS_WORDS
 
 __all__ = ["make_megakernel", "make_count"]
+
+#: occupied/empty discriminator for ready-pool slots (row ids sit far
+#: below, the QUEUE_EMPTY sentinel far above)
+_QTH = QUEUE_EMPTY / 2
 
 #: incremented on every ``make_megakernel`` call — the compile-count hook
 #: used by tests to assert the Program API builds the kernel exactly once
@@ -124,13 +153,24 @@ def make_megakernel(statics: Dict[str, Any], num_steps: int,
     SCH_W = max(1, statics.get("STORE_CH", 128))   # masked-store chunk
     SB_ROWS = max(TKC, TS, HDS, WC, 8)
     TNK = max(TN, TKC)
+    DYN = bool(statics.get("DYN", 0))
+    QOFF = statics.get("QOFF", 0)
+    QCAP = statics.get("QCAP", 128)
+    OV_ROWS = max(1, statics.get("OV_ROWS", 1))
+    OVOFF = QOFF + W * QCAP
+    QC_OFF = statics.get("QC_OFF", 0)
+    TRACE_OFF = statics.get("TRACE_OFF", 0)
+    MAX_OUT = statics.get("MAX_OUT", 0)
 
-    def kernel(desc, heap_in, heap, sA, sB, sC, sD, acc, acc2, sP, sE,
-               cnt, sem, psem):
+    def kernel(desc, *rest):
+        if DYN:
+            (sched, heap_in, heap, sA, sB, sC, sD, acc, acc2, sP, sE,
+             cnt, sem, psem, sQ, sS) = rest
+        else:
+            (heap_in, heap, sA, sB, sC, sD, acc, acc2, sP, sE,
+             cnt, sem, psem) = rest
         s = pl.program_id(0)                # grid step (shared time axis)
         w_id = pl.program_id(1)             # worker lane
-        t = s * W + w_id                    # row in the descriptor grid
-        d = lambda i: desc[t, i]
         slot = jax.lax.rem(s, 2)            # A side: this step's operands
         nslot = jax.lax.rem(s + 1, 2)       # B side: prefetch target
 
@@ -316,36 +356,168 @@ def make_megakernel(statics: Dict[str, Any], num_steps: int,
                     cp.start()
                     cp.wait()
 
+        # --------------- queue-word helpers (dynamic scheduler only) ----
+        # Raw single-row / single-word heap traffic for the ready pools,
+        # cursor counters and pop trace.  Deliberately NOT routed through
+        # ``_count``: the DMA counters keep measuring operand traffic;
+        # scheduler traffic is visible through words 8-11 instead.
+        def _qrow(r, base, width=QCAP):
+            """sQ[r, :width] = heap[base : base + width] (one pool row)."""
+            cp = pltpu.make_async_copy(
+                heap.at[pl.ds(base, width)],
+                sQ.at[r, pl.ds(0, width)], sem)
+            cp.start()
+            cp.wait()
+
+        def _qword_out(col, addr):
+            """heap[addr] = sE[0, col] (pool slot / trace word store)."""
+            cp = pltpu.make_async_copy(
+                sE.at[0, pl.ds(col, 1)], heap.at[pl.ds(addr, 1)], sem)
+            cp.start()
+            cp.wait()
+
+        def _rmw_add(addr, delta):
+            """heap[addr] += delta through the sE scratch (the same RMW
+            the event counters use; sequential interpret order makes it
+            exact — on hardware this is the queue's atomic)."""
+            cpi = pltpu.make_async_copy(
+                heap.at[pl.ds(addr, 1)], sE.at[0, pl.ds(3, 1)], sem)
+            cpi.start()
+            cpi.wait()
+            sE[0, pl.ds(3, 1)] = sE[0, pl.ds(3, 1)] + delta
+            cpo = pltpu.make_async_copy(
+                sE.at[0, pl.ds(3, 1)], heap.at[pl.ds(addr, 1)], sem)
+            cpo.start()
+            cpo.wait()
+
+        # --------------- task selection: static grid row or dynamic pop
+        if DYN:
+            # Pop per the protocol order (runtime/dyn_sched.py): own
+            # pool, overflow queue, then steal.  Each pool scan is one
+            # bulk row DMA + a vector argmin; the minimum row id (=
+            # earliest linearized position) wins.
+            sS[0] = jnp.int32(-1)       # source: -1 none, 0 own, 1 ovf,
+            sS[1] = jnp.int32(0)        #   2 steal; [1] consumed slot
+            sS[4] = jnp.int32(0)        #   offset; [4] popped row id
+            _qrow(0, QOFF + w_id * QCAP)
+            vals = sQ[0, :]
+            mn = jnp.min(vals)
+
+            @pl.when(mn < _QTH)
+            def _():
+                sS[0] = jnp.int32(0)
+                sS[1] = (w_id * QCAP
+                         + jnp.argmin(vals)).astype(jnp.int32)
+                sS[4] = mn.astype(jnp.int32)
+
+            @pl.when(sS[0] < 0)
+            def _():                    # overflow queue scan
+                for r in range(OV_ROWS):
+                    _qrow(r, OVOFF + r * QCAP)
+                tile = sQ[:OV_ROWS, :]
+                mo = jnp.min(tile)
+
+                @pl.when(mo < _QTH)
+                def _():
+                    sS[0] = jnp.int32(1)
+                    sS[1] = (W * QCAP + jnp.argmin(
+                        tile.reshape(-1))).astype(jnp.int32)
+                    sS[4] = mo.astype(jnp.int32)
+
+            for k in range(1, W):       # steal scan, victims (w+k) % W
+                @pl.when(sS[0] < 0)
+                def _(k=k):
+                    vw = jax.lax.rem(w_id + k, W)
+                    _qrow(0, QOFF + vw * QCAP)
+                    sv = sQ[0, :]
+                    ms = jnp.min(sv)
+
+                    @pl.when(ms < _QTH)
+                    def _():
+                        sS[0] = jnp.int32(2)
+                        sS[1] = (vw * QCAP
+                                 + jnp.argmin(sv)).astype(jnp.int32)
+                        sS[4] = ms.astype(jnp.int32)
+
+            popped = sS[0] >= 0
+            t = sS[4]                   # the popped descriptor row
+
+            @pl.when(popped)
+            def _():                    # consume: mark slot empty
+                sE[0, pl.ds(1, 1)] = jnp.full((1,), QUEUE_EMPTY,
+                                              jnp.float32)
+                _qword_out(1, QOFF + sS[1])
+                pool = jnp.minimum(sS[1] // QCAP, W)
+                _rmw_add(QC_OFF + 2 * pool + 1, 1.0)   # popped cursor
+
+                @pl.when(sS[0] == 0)
+                def _():
+                    cadd(8, 1.0)
+
+                @pl.when(sS[0] == 1)
+                def _():
+                    cadd(9, 1.0)
+
+                @pl.when(sS[0] == 2)
+                def _():
+                    cadd(10, 1.0)
+
+            @pl.when(jnp.logical_not(popped))
+            def _():                    # only the trailing pad slots
+                cadd(11, 1.0)
+
+            # pop trace: what this grid slot executed (QUEUE_EMPTY when
+            # idle) — asserted equal to dyn_sched.replay_sequential
+            sE[0, pl.ds(2, 1)] = jnp.where(
+                popped, sS[4].astype(jnp.float32),
+                QUEUE_EMPTY).reshape(1)
+            _qword_out(2, TRACE_OFF + s * W + w_id)
+        else:
+            popped = None
+            t = s * W + w_id            # row in the static grid
+        d = lambda i: desc[t, i]
+
         # ------------------------------------------------ prefetch phase
+        # (static scheduler only: the dynamic scheduler cannot know a
+        # slot's next task at compile time, so every dynamic task
+        # demand-loads through its own record, words 28-30.)
         # Issue the NEXT task in this worker's stream into the B side of
         # this worker's double buffer.  The compiler emitted (off, ld,
         # rows) at words 24-26 only when the tile does not overlap
         # anything any worker writes in this or the next step, so reading
         # before those stores land is safe (that is the hazard analysis).
-        pf_rows = d(26)
+        if not DYN:
+            pf_rows = d(26)
 
-        @pl.when(pf_rows > 0)
-        def _():
-            _count(pf_rows)
-            cadd(2, 1.0)
-
-        def pf_body(i, _):
-            @pl.when(i < pf_rows)
+            @pl.when(pf_rows > 0)
             def _():
-                pltpu.make_async_copy(
-                    heap.at[pl.ds(d(24) + i * d(25), TN)],
-                    sP.at[w_id, nslot, i, pl.ds(0, TN)],
-                    psem.at[w_id, nslot]).start()
-            return 0
-        jax.lax.fori_loop(0, TM, pf_body, 0)
+                _count(pf_rows)
+                cadd(2, 1.0)
+
+            def pf_body(i, _):
+                @pl.when(i < pf_rows)
+                def _():
+                    pltpu.make_async_copy(
+                        heap.at[pl.ds(d(24) + i * d(25), TN)],
+                        sP.at[w_id, nslot, i, pl.ds(0, TN)],
+                        psem.at[w_id, nslot]).start()
+                return 0
+            jax.lax.fori_loop(0, TM, pf_body, 0)
+
+        def _gate(pred):
+            """Conjoin ``pred`` with "this slot popped a task" under the
+            dynamic scheduler (idle pad slots must not execute)."""
+            return pred if not DYN else jnp.logical_and(popped, pred)
 
         # ------------------------------------------- event wait (word 32)
         # Cross-worker producers synchronize through the in-heap event
         # table.  The sequential interpret-mode order already satisfies
-        # every dependency, so the hardware spin-wait degrades to a
-        # checked assertion: the counter must ALREADY equal the trigger
-        # count; anything else is a compiler bug, counted as a violation.
-        @pl.when(d(32) >= 0)
+        # every dependency (static: proved by the compiler; dynamic: a
+        # task is only ever popped after its event fully triggered), so
+        # the hardware spin-wait degrades to a checked assertion: the
+        # counter must ALREADY equal the trigger count; anything else is
+        # a compiler/scheduler bug, counted as a violation.
+        @pl.when(_gate(d(32) >= 0))
         def _():
             cpw = pltpu.make_async_copy(
                 heap.at[pl.ds(EVENT_OFF + d(32), 1)],
@@ -712,18 +884,54 @@ def make_megakernel(statics: Dict[str, Any], num_steps: int,
                     store_row_vec(acc, r, d(4) + r * d(5), TN,
                                   valid=d(2))
 
-        jax.lax.switch(d(0), [
-            k_noop, k_matmul, k_rmsnorm, k_rope, k_glu, k_resid, k_attn,
-            k_cache_update, k_embed, k_softmax_topk, k_moe_gg,
-            k_moe_combine, k_ssm, k_conv,
-        ])
+        def _dispatch():
+            jax.lax.switch(d(0), [
+                k_noop, k_matmul, k_rmsnorm, k_rope, k_glu, k_resid,
+                k_attn, k_cache_update, k_embed, k_softmax_topk, k_moe_gg,
+                k_moe_combine, k_ssm, k_conv,
+            ])
 
-        # ----------------------------------------- event signal (word 34)
+        if DYN:
+            @pl.when(popped)
+            def _():
+                _dispatch()
+        else:
+            _dispatch()
+
+        # --------------------------------- enqueue one newly-ready task
+        def _push(crow):
+            """Push descriptor row ``crow`` into its affinity worker's
+            pool (word 35; first empty slot), spilling to the shared
+            overflow queue when the pool is full."""
+            aw = desc[crow, 35]
+            _qrow(0, QOFF + aw * QCAP)
+            free = sQ[0, :] >= _QTH
+            sE[0, pl.ds(4, 1)] = crow.astype(jnp.float32).reshape(1)
+
+            @pl.when(jnp.any(free))
+            def _():
+                fidx = jnp.argmax(free).astype(jnp.int32)
+                _qword_out(4, QOFF + aw * QCAP + fidx)
+                _rmw_add(QC_OFF + 2 * aw, 1.0)       # pushed cursor
+
+            @pl.when(jnp.logical_not(jnp.any(free)))
+            def _():                     # affinity pool full: overflow
+                for r in range(OV_ROWS):
+                    _qrow(r, OVOFF + r * QCAP)
+                ofree = (sQ[:OV_ROWS, :] >= _QTH).reshape(-1)
+                oidx = jnp.argmax(ofree).astype(jnp.int32)
+                _qword_out(4, OVOFF + oidx)
+                _rmw_add(QC_OFF + 2 * W, 1.0)
+
+        # ------------------------- event signal-and-enqueue (word 34)
         # After this task's stores have landed, increment its triggering
         # event's in-heap counter (a read-modify-write through VMEM; on
         # real parallel hardware this is the atomic the event table
         # provides — interpret mode's sequential grid makes it exact).
-        @pl.when(d(34) >= 0)
+        # Under the dynamic scheduler, the producer whose increment
+        # brings the counter to the trigger count walks the event's
+        # consumer list and enqueues every newly-ready task.
+        @pl.when(_gate(d(34) >= 0))
         def _():
             cpi = pltpu.make_async_copy(
                 heap.at[pl.ds(EVENT_OFF + d(34), 1)],
@@ -737,6 +945,17 @@ def make_megakernel(statics: Dict[str, Any], num_steps: int,
             cpo.start()
             cpo.wait()
             cadd(7, 1.0)
+            if DYN and MAX_OUT > 0:
+                trig = sched[d(34), 0].astype(jnp.float32)
+
+                @pl.when(sE[0, 0] == trig)
+                def _():                 # event fully triggered
+                    def push_body(j, _):
+                        @pl.when(j < sched[d(34), 1])
+                        def _():
+                            _push(sched[d(34), 2 + j])
+                        return 0
+                    jax.lax.fori_loop(0, MAX_OUT, push_body, 0)
 
         # flush the per-worker counter blocks to their reserved heap
         # slots — only the final grid iteration: the totals accumulate in
@@ -752,30 +971,36 @@ def make_megakernel(statics: Dict[str, Any], num_steps: int,
                 cp.wait()
 
     sd_rows = max(TM, TS, WC, 8)
+    scratch_shapes = [
+        pltpu.VMEM((TM, TNK), jnp.float32),        # sA
+        pltpu.VMEM((SB_ROWS, TN), jnp.float32),    # sB
+        pltpu.VMEM((max(8, TM), max(TN, TM)), jnp.float32),  # sC
+        pltpu.VMEM((sd_rows, TN), jnp.float32),    # sD
+        pltpu.VMEM((TM, TN), jnp.float32),         # acc
+        pltpu.VMEM((TM, TN), jnp.float32),         # acc2
+        pltpu.VMEM((W, 2, TM, TN), jnp.float32),   # sP (per-worker
+                                                   #     double buffer)
+        pltpu.VMEM((1, 8), jnp.float32),           # sE (event counter)
+        pltpu.VMEM((W, STATS_WORDS), jnp.float32),  # cnt (per-worker)
+        pltpu.SemaphoreType.DMA,                   # sem (bulk tiles)
+        pltpu.SemaphoreType.DMA((W, 2)),           # psem (worker, slot)
+    ]
+    if DYN:
+        scratch_shapes += [
+            pltpu.VMEM((OV_ROWS, QCAP), jnp.float32),  # sQ (pool scans)
+            pltpu.SMEM((8,), jnp.int32),               # sS (pop state)
+        ]
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=1,
+        num_scalar_prefetch=2 if DYN else 1,
         grid=(num_steps, W),
         in_specs=[pl.BlockSpec(memory_space=pl.ANY)],
         out_specs=pl.BlockSpec(memory_space=pl.ANY),
-        scratch_shapes=[
-            pltpu.VMEM((TM, TNK), jnp.float32),        # sA
-            pltpu.VMEM((SB_ROWS, TN), jnp.float32),    # sB
-            pltpu.VMEM((max(8, TM), max(TN, TM)), jnp.float32),  # sC
-            pltpu.VMEM((sd_rows, TN), jnp.float32),    # sD
-            pltpu.VMEM((TM, TN), jnp.float32),         # acc
-            pltpu.VMEM((TM, TN), jnp.float32),         # acc2
-            pltpu.VMEM((W, 2, TM, TN), jnp.float32),   # sP (per-worker
-                                                       #     double buffer)
-            pltpu.VMEM((1, 8), jnp.float32),           # sE (event counter)
-            pltpu.VMEM((W, STATS_WORDS), jnp.float32),  # cnt (per-worker)
-            pltpu.SemaphoreType.DMA,                   # sem (bulk tiles)
-            pltpu.SemaphoreType.DMA((W, 2)),           # psem (worker, slot)
-        ],
+        scratch_shapes=scratch_shapes,
     )
     return functools.partial(
         pl.pallas_call,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((heap_size,), jnp.float32),
-        input_output_aliases={1: 0},
+        input_output_aliases={2 if DYN else 1: 0},
         interpret=True,
     )(kernel)

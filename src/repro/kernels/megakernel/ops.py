@@ -42,7 +42,8 @@ def compile_decode_megakernel(cfg, batch: int, max_seq: int,
                               latency_aware: bool = True,
                               event_fusion: bool = True,
                               pipeline_depth: int = 2,
-                              num_workers: int = 1
+                              num_workers: int = 1,
+                              scheduler: str = "static"
                               ) -> MegakernelPlan:
     """Lower cfg's decode step end-to-end: op graph → tGraph → descriptors.
 
@@ -52,6 +53,9 @@ def compile_decode_megakernel(cfg, batch: int, max_seq: int,
     (2 = the kernel's double buffer).  ``num_workers`` partitions the
     schedule into W decentralized per-worker descriptor streams
     synchronized through in-heap event counters (paper §5).
+    ``scheduler="dynamic"`` replaces the static streams with the
+    heap-resident ready queues of ``runtime/dyn_sched.py`` — pop →
+    wait → compute → signal-and-enqueue per grid slot.
     """
     g = build_decode_graph(cfg, batch, max_seq)
     opts = CompileOptions(
@@ -60,9 +64,10 @@ def compile_decode_megakernel(cfg, batch: int, max_seq: int,
         event_fusion=event_fusion,
         pipeline_depth=pipeline_depth,
         num_workers=num_workers,
+        scheduler=scheduler,
     )
     compiled = megakernelize(g, opts)
-    return lower_tgraph(compiled, cfg)
+    return lower_tgraph(compiled, cfg, scheduler=scheduler)
 
 
 class MegakernelExecutor:
@@ -104,6 +109,17 @@ class MegakernelExecutor:
         if self._n_events:
             idx_parts.append(np.arange(plan.event_offset,
                                        plan.event_offset + self._n_events))
+        # dynamic scheduler: the ready pools, overflow queue and cursor
+        # counters are consumed during the launch — the same scatter
+        # re-writes the initial queue image before every step
+        self._dynamic = plan.scheduler == "dynamic"
+        if self._dynamic:
+            pools, counters = plan.dyn.queue_image()
+            self._queue_reset = np.concatenate([pools, counters])
+            idx_parts.append(np.arange(
+                plan.queue_offset,
+                plan.queue_offset + self._queue_reset.size))
+            self._sched = jnp.asarray(plan.dyn.sched_table())
         self._upd_idx = jnp.asarray(
             np.concatenate(idx_parts).astype(np.int32))
         self._descs = jnp.asarray(plan.descs)
@@ -136,7 +152,10 @@ class MegakernelExecutor:
         def _step(heap, vals):
             self.trace_count += 1  # python side effect: runs at trace only
             heap = heap.at[self._upd_idx].set(vals)
-            heap = kern(self._descs, heap)
+            if self._dynamic:
+                heap = kern(self._descs, self._sched, heap)
+            else:
+                heap = kern(self._descs, heap)
             logits = heap[lg.offset : lg.offset + lg.rows * lg.ld]
             logits = logits.reshape(lg.rows, lg.ld)[:, :lg_cols]
             return heap, logits
@@ -179,6 +198,8 @@ class MegakernelExecutor:
                 for name, rows, cols in self._entries]
         if self._n_events:
             flat.append(np.zeros((self._n_events,), np.float32))
+        if self._dynamic:
+            flat.append(self._queue_reset)
         return jnp.asarray(np.concatenate(flat))
 
     # ------------------------------------------------------------- public
@@ -230,6 +251,10 @@ class MegakernelExecutor:
                 "event_waits": int(v[5]),
                 "event_wait_violations": int(v[6]),
                 "event_signals": int(v[7]),
+                "pops_own": int(v[8]),
+                "pops_overflow": int(v[9]),
+                "steals": int(v[10]),
+                "idle_slots": int(v[11]),
             })
         return out
 
@@ -243,8 +268,44 @@ class MegakernelExecutor:
         per_worker = self.worker_counters()
         keys = ("bulk_copies", "row_copies", "prefetch_tiles",
                 "primary_fallbacks", "event_waits",
-                "event_wait_violations", "event_signals")
+                "event_wait_violations", "event_signals",
+                "pops_own", "pops_overflow", "steals", "idle_slots")
         return {k: sum(d[k] for d in per_worker) for k in keys}
+
+    def scheduler_counters(self) -> Dict[str, Any]:
+        """Dynamic-scheduler queue accounting for the LAST step, read
+        from the in-heap cursor counters and pop counters: per-pool
+        [pushed, popped] cursors (W workers + the shared overflow queue)
+        and the pop-source split.  Every pool must drain
+        (pushed == popped) once the launch completes."""
+        assert self._dynamic, "static scheduler has no queue counters"
+        assert self._heap is not None, "upload() before counters"
+        W = self.plan.num_workers
+        off = self.plan.qc_offset
+        qc = np.asarray(self._heap[off : off + 2 * (W + 1)])
+        per = self.pipeline_counters()
+        return {
+            "queue_pushed": [int(qc[2 * i]) for i in range(W + 1)],
+            "queue_popped": [int(qc[2 * i + 1]) for i in range(W + 1)],
+            "pops_own": per["pops_own"],
+            "pops_overflow": per["pops_overflow"],
+            "steals": per["steals"],
+            "idle_slots": per["idle_slots"],
+        }
+
+    def pop_trace(self) -> np.ndarray:
+        """The dynamic scheduler's in-heap pop trace for the LAST step:
+        the descriptor row each grid slot executed, -1 for idle pad
+        slots.  Asserted equal to ``dyn_sched.replay_sequential`` by the
+        tests (the sequential interpret-mode execution IS the protocol
+        replay)."""
+        from ...runtime.dyn_sched import QUEUE_EMPTY
+        assert self._dynamic, "static scheduler has no pop trace"
+        assert self._heap is not None, "upload() before pop_trace()"
+        off = self.plan.trace_offset
+        n = self.plan.num_steps * self.plan.num_workers
+        tr = np.asarray(self._heap[off : off + n])
+        return np.where(tr >= QUEUE_EMPTY / 2, -1, tr).astype(np.int64)
 
     def read_heap(self) -> np.ndarray:
         """Host copy of the resident heap (state inspection / snapshots)."""

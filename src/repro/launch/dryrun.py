@@ -27,17 +27,23 @@ import jax
 import numpy as np
 
 
-def program_stats(arch: str, shape) -> dict:
+def program_stats(arch: str, shape, num_workers: int = 4,
+                  scheduler: str = "static") -> dict:
     """Compiler-side Program stats for a cell (``repro.api`` interpreter
-    backend — no execution): task/event counts and the liveness-packed
-    workspace footprint at a serving-representative (batch, seq)."""
+    backend — no execution): task/event counts, the liveness-packed
+    workspace footprint, and the W-worker runtime contract
+    (``Program.worker_stats``: partition, event-counter cut, replayed
+    makespan; with ``scheduler="dynamic"`` also the ready-queue depth /
+    pop-source profile of the protocol replay) at a
+    serving-representative (batch, seq)."""
     from repro.api import compile as mpk_compile
     from repro.configs import get_config
 
     cfg = get_config(arch)
     batch = min(8, shape.global_batch)
     max_seq = min(1024, shape.seq_len)
-    prog = mpk_compile(cfg, batch, max_seq, backend="interpreter")
+    prog = mpk_compile(cfg, batch, max_seq, backend="interpreter",
+                       num_workers=num_workers, scheduler=scheduler)
     rec = prog.describe()
     s = prog.stats
     rec["workspace_reuse_x"] = round(s["workspace_reuse_x"], 2)
@@ -45,6 +51,25 @@ def program_stats(arch: str, shape) -> dict:
     ps = prog.pipeline_stats
     rec["pipeline_stalls"] = ps["stalls"]
     rec["pipeline_stalls_naive"] = ps["stalls_naive"]
+    ws = prog.worker_stats
+    rec["workers"] = {
+        "scheduler": ws["scheduler"],
+        "num_workers": ws["num_workers"],
+        "queue_lens": ws["queue_lens"],
+        "cross_worker_deps": ws["cross_worker_deps"],
+        "partition_steps": ws["partition_steps"],
+        "sim_makespan_us": round(ws["sim_makespan_us"], 2),
+        "worker_utilization": [round(u, 4)
+                               for u in ws["worker_utilization"]],
+    }
+    if scheduler == "dynamic":
+        rec["workers"].update({
+            "dyn_sim_makespan_us": round(ws["dyn_sim_makespan_us"], 2),
+            "queue_max_depth": ws["queue_max_depth"],
+            "pops_own": ws["replay_pops_own"],
+            "pops_overflow": ws["replay_pops_overflow"],
+            "steals": ws["replay_steals"],
+        })
     return rec
 
 
@@ -72,7 +97,10 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
         rec["reason"] = why
         return rec
     if with_program_stats:
-        rec["program"] = program_stats(arch, shape)
+        rec["program"] = program_stats(
+            arch, shape,
+            num_workers=(overrides or {}).get("program_workers", 4),
+            scheduler=(overrides or {}).get("program_scheduler", "static"))
 
     mesh = make_production_mesh(multi_pod=multi_pod)
     chips = int(np.prod(list(mesh.shape.values())))
@@ -217,7 +245,15 @@ def main() -> int:
                     help="suffix for the result json (perf variants)")
     ap.add_argument("--program-stats", action="store_true",
                     help="record repro.api Program compiler stats (tasks/"
-                         "events/workspace) in each cell json")
+                         "events/workspace + worker partition / event "
+                         "counters / ready-queue depths) in each cell json")
+    ap.add_argument("--program-workers", type=int, default=4,
+                    help="worker width the --program-stats compile "
+                         "partitions onto")
+    ap.add_argument("--program-scheduler", choices=["static", "dynamic"],
+                    default="static",
+                    help="runtime scheduler for --program-stats (dynamic "
+                         "adds ready-queue depth / pop-source stats)")
     args = ap.parse_args()
     overrides = {}
     if args.no_sp:
@@ -232,6 +268,10 @@ def main() -> int:
         overrides["q_head_replicate"] = True
     if args.moe_2d:
         overrides["moe_2d"] = True
+    if args.program_workers != 4:
+        overrides["program_workers"] = args.program_workers
+    if args.program_scheduler != "static":
+        overrides["program_scheduler"] = args.program_scheduler
 
     from repro.configs import SHAPES, list_archs
 

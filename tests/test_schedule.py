@@ -73,6 +73,69 @@ def test_kernel_native_depth_is_stall_free():
 
 
 # ---------------------------------------------------------------------------
+# Skewed-cost partitioning: the replay/partitioner contract must hold for
+# ANY per-task cost model, not just the roofline defaults (ragged decode
+# batches scale attention costs per slot — core/runtime_sim.skewed_time_fn).
+# ---------------------------------------------------------------------------
+
+
+def test_partition_monotone_under_skewed_costs():
+    """Replayed makespan stays monotone non-increasing in W and
+    ``validate()`` holds when per-task costs are skewed by ragged
+    per-slot KV lengths (the candidate-width nesting argument is
+    cost-model-independent)."""
+    from repro.core.runtime_sim import ragged_kv_lens, skewed_time_fn
+    from repro.core.schedule import (default_task_time, partition_workers,
+                                     replay_partition)
+
+    for arch in FAMILIES:
+        cfg = dataclasses.replace(get_config(arch).reduced(), n_layers=2)
+        c = megakernelize(build_decode_graph(cfg, 8, 64),
+                          CompileOptions())
+        kv = ragged_kv_lens(8, 64, 4.0)
+        tfn = skewed_time_fn(default_task_time, kv)
+        prev = None
+        for W in (1, 2, 4, 8):
+            part = partition_workers(c.tg, c.lin, W, time_fn=tfn)
+            part.validate(c.tg)
+            assert part.requested_workers == W
+            if prev is not None:
+                assert part.est_makespan <= prev + 1e-15, (arch, W)
+            prev = part.est_makespan
+            # the shared replay is deterministic under the skewed costs
+            r1 = replay_partition(c.tg, part.queues, part.step_of,
+                                  time_fn=tfn)
+            r2 = replay_partition(c.tg, part.queues, part.step_of,
+                                  time_fn=tfn)
+            assert r1.makespan == r2.makespan == part.est_makespan
+
+
+def test_skewed_time_fn_scales_only_attention():
+    """The ragged-KV wrapper touches ATTENTION_DECODE tasks only, scales
+    them by mean(slot KV)/max(KV), and reduces to the base costs on a
+    uniform batch."""
+    from repro.core.graph import OpKind as OK
+    from repro.core.runtime_sim import ragged_kv_lens, skewed_time_fn
+    from repro.core.schedule import default_task_time
+
+    cfg = dataclasses.replace(get_config("deepseek-7b").reduced(),
+                              n_layers=1)
+    c = megakernelize(build_decode_graph(cfg, 8, 64), CompileOptions())
+    uniform = skewed_time_fn(default_task_time, ragged_kv_lens(8, 64, 1.0))
+    skewed = skewed_time_fn(default_task_time, ragged_kv_lens(8, 64, 4.0))
+    n_attn = 0
+    for t in c.tg.tasks.values():
+        base = default_task_time(t, False)
+        assert uniform(t, False) == pytest.approx(base)
+        if t.kind == OK.ATTENTION_DECODE:
+            n_attn += 1
+            assert skewed(t, False) <= base + 1e-18
+        else:
+            assert skewed(t, False) == pytest.approx(base)
+    assert n_attn > 0
+
+
+# ---------------------------------------------------------------------------
 # overlap_statistics invariants under randomized tGraphs.
 # ---------------------------------------------------------------------------
 
@@ -136,6 +199,28 @@ if given is not None:
         naive = linearize(tg)
         assert (count_pipeline_stalls(lin, depth)
                 <= count_pipeline_stalls(naive, depth))
+
+    @settings(max_examples=25, deadline=None)
+    @given(st.data())
+    def test_partition_monotone_under_random_task_costs(data):
+        """Monotone makespan + validate() under ARBITRARY non-uniform
+        per-task cost multipliers (not just roofline-default costs)."""
+        from repro.core.schedule import default_task_time, partition_workers
+
+        tg = random_tgraph(data.draw)
+        mult = {t: data.draw(st.floats(0.1, 8.0)) for t in tg.tasks}
+
+        def tfn(task, stalled):
+            return default_task_time(task, stalled) * mult[task.task_id]
+
+        lin = latency_aware_linearize(tg)
+        prev = None
+        for W in (1, 2, 3, 4):
+            part = partition_workers(tg, lin, W, time_fn=tfn)
+            part.validate(tg)
+            if prev is not None:
+                assert part.est_makespan <= prev + 1e-15
+            prev = part.est_makespan
 else:                                             # pragma: no cover
     @pytest.mark.skip(reason="property tests need the optional hypothesis "
                       "dep (pip install '.[test]')")
