@@ -16,12 +16,14 @@ RUNS = Path(__file__).resolve().parent.parent / "runs"
 @functools.lru_cache(maxsize=32)
 def compiled_decode(arch: str, batch: int = 1, seq: int = 2048,
                     tp: int = 1, latency_aware: bool = True,
-                    fusion: bool = True):
+                    fusion: bool = True, max_rows: int | None = None):
     """A compiled decode tGraph via the Program API (interpreter backend —
-    compiler artifacts only, no execution)."""
+    compiler artifacts only, no execution).  ``max_rows`` overrides the
+    decomposer's row-tile cap (None = the DecomposeConfig default)."""
     cfg = get_config(arch)
     prog = api.compile(cfg, batch, seq, backend="interpreter", tp=tp,
-                       latency_aware=latency_aware, event_fusion=fusion)
+                       latency_aware=latency_aware, event_fusion=fusion,
+                       max_rows=max_rows)
     return prog.compiled  # stats["compile_wall_s"] set by the Program
 
 

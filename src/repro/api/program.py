@@ -424,9 +424,11 @@ class PallasProgram(Program):
     def __init__(self, cfg, batch, max_seq, step_cache=None, *,
                  max_rows: int = 8, latency_aware: bool = True,
                  event_fusion: bool = True, pipeline_depth: int = 2,
-                 num_workers: int = 1, scheduler: str = "static"):
+                 num_workers: int = 1, scheduler: str = "static",
+                 tp: int = 1):
         super().__init__(cfg, batch, max_seq, step_cache, pipeline_depth,
                          num_workers, scheduler)
+        self.tp = tp
         # late import keeps the api package importable without pallas
         from ..kernels.megakernel import (MegakernelExecutor,
                                           compile_decode_megakernel)
@@ -434,7 +436,7 @@ class PallasProgram(Program):
             cfg, batch, max_seq, max_rows=max_rows,
             latency_aware=latency_aware, event_fusion=event_fusion,
             pipeline_depth=pipeline_depth, num_workers=num_workers,
-            scheduler=scheduler)
+            scheduler=scheduler, tp=tp)
         self._compiled = self.plan.compiled
         self.executor = MegakernelExecutor(self.plan, cfg)
         self._smap = _state_map(cfg)
@@ -568,8 +570,13 @@ def compile(cfg, batch: int, max_seq: int, backend: str = "jax", *,
     signal-and-enqueue; outputs stay bitwise-identical to static —
     the megakernel runs the in-kernel protocol, the interpreter executes
     its sequential replay, the jax oracle is unaffected), ``tp`` inserts
-    AllReduce ops (interpreter stats only).  ``step_cache`` shares
-    (cfg, width)-keyed jitted prefill steps across programs.
+    AllReduce ops (paper §6.5) — on the interpreter backend they compile
+    to graph stats, on the megakernel backend ``tp > 1`` stamps the plan
+    into per-chip task tables whose collectives execute in-kernel as
+    chunked ring-allreduce COMM tasks (``desc.stamp_multichip``; static
+    scheduler only; per-chip outputs are bitwise-identical across
+    TP ∈ {1, 2, 4}).  ``step_cache`` shares (cfg, width)-keyed jitted
+    prefill steps across programs.
     """
     if backend not in _BACKEND_CLASSES:
         raise ValueError(
@@ -591,9 +598,6 @@ def compile(cfg, batch: int, max_seq: int, backend: str = "jax", *,
             scheduler=scheduler)
         return InterpreterProgram(cfg, batch, max_seq, step_cache,
                                   options=opts, tp=tp)
-    if tp != 1:
-        raise ValueError(f"tp={tp} is only supported on the interpreter "
-                         "backend (compiler statistics)")
     if backend == "megakernel":
         return PallasProgram(cfg, batch, max_seq, step_cache,
                              max_rows=8 if max_rows is None else max_rows,
@@ -601,7 +605,10 @@ def compile(cfg, batch: int, max_seq: int, backend: str = "jax", *,
                              event_fusion=event_fusion,
                              pipeline_depth=pipeline_depth,
                              num_workers=num_workers,
-                             scheduler=scheduler)
+                             scheduler=scheduler, tp=tp)
+    if tp != 1:
+        raise ValueError(f"tp={tp} is only supported on the interpreter "
+                         "and megakernel backends")
     return JaxProgram(cfg, batch, max_seq, step_cache,
                       pipeline_depth=pipeline_depth,
                       num_workers=num_workers, scheduler=scheduler)

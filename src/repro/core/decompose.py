@@ -56,6 +56,13 @@ def _partition_primary(
 ) -> List[Region]:
     """Tile the primary output of ``op`` into task regions."""
     shape = out_spec.shape
+    if op.kind == OpKind.ALLREDUCE:
+        # collectives are atomic: their chunking is the ring protocol's
+        # own (``distributed.comm_tasks.ring_chunks``), not the tiler's.
+        # Splitting a collective into tiles would shrink every ring
+        # chunk into the latency-bound regime and break the megakernel
+        # lowering's whole-rows assumption.
+        return list(tile_regions(shape, shape))
     if op.kind in _ROW_ONLY_KINDS or op.attrs.get("row_only", False):
         # full-width row tiles (reductions over the feature dimension)
         rows = shape[0]

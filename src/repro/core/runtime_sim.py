@@ -20,6 +20,18 @@ execution models:
   mpk_coarse    — event-driven execution with operator-granularity events
                   (Fig. 5c), the compute–communication-overlap ablation
                   of Fig. 13,
+  mpk_tp        — the multi-chip megakernel (``SimConfig.tp`` chips):
+                  the same worker-partition replay as ``mpk``, but every
+                  ALLREDUCE task charges the chunked ring-allreduce of
+                  ``distributed/comm_tasks.py`` — the SAME
+                  ``expand_ring_allreduce`` schedule the descriptor
+                  stamper lowers into the kernel, so simulator rounds and
+                  kernel COMM tasks cannot drift apart.  At ``tp <= 1``
+                  the branch reduces *exactly* to ``mpk`` (identical code
+                  path).  ``comm_plan="serialized"`` is the fig13
+                  baseline: the whole tensor crosses the wire twice per
+                  collective with no chunking (pair with
+                  ``overlap_comm=False`` for the fully blocking variant),
   mpk_dyn       — the decentralized *dynamic* scheduler
                   (``runtime/dyn_sched.py``): workers pop ready tasks
                   from heap-resident queues (own pool → shared overflow
@@ -50,7 +62,8 @@ import heapq
 from typing import Dict, List, Optional, Sequence
 
 from ..roofline.hw import (AOT_EVENT_WAIT, COMM_LATENCY, COMPUTE_LATENCY,
-                           JIT_HOP, TASK_OVERHEAD, TPU_V5E, WORKERS_PER_CHIP)
+                           JIT_HOP, TASK_OVERHEAD, TPU_V5E, WORKERS_PER_CHIP,
+                           comm_time)
 from .compile import CompiledTGraph
 from .graph import OpKind
 from .schedule import partition_workers, replay_partition
@@ -72,8 +85,14 @@ class SimConfig:
     jit_hop: float = JIT_HOP          # worker->scheduler->worker (§5.2)
     aot_wait: float = AOT_EVENT_WAIT  # one event wait
     launch_overhead: float = 3.8e-6  # per-kernel launch (paper §6.6)
-    mode: str = "mpk"          # kernel_per_op | mpk | mpk_coarse | mpk_dyn
+    mode: str = "mpk"   # kernel_per_op | mpk | mpk_coarse | mpk_dyn | mpk_tp
     overlap_comm: bool = True
+    #: number of TP chips (mode="mpk_tp"); tp<=1 reduces exactly to "mpk"
+    tp: int = 1
+    #: collective cost model for mode="mpk_tp": "ring" charges the
+    #: chunked ring rounds the kernel really executes, "serialized" the
+    #: whole-tensor two-pass baseline of fig13
+    comm_plan: str = "ring"
     #: per-batch-slot live KV lengths (ragged decode): scales attention
     #: task costs by mean(kv_lens[task rows]) / max(kv_lens); None =
     #: uniform (every slot at the nominal full-cache cost)
@@ -110,7 +129,8 @@ def _task_time(task, cfg: SimConfig, stalled: bool = False,
     if task.is_dummy:
         return 0.0
     if task.is_comm:
-        return task.bytes_moved() / cfg.ici_bw + cfg.comm_latency
+        return comm_time(task.bytes_moved(), ici_bw=cfg.ici_bw,
+                         latency=cfg.comm_latency)
     load = task.bytes_moved() / cfg.worker_bw
     comp = task.flops() / cfg.worker_flops + cfg.compute_latency
     if cfg.pipelined and not stalled:
@@ -195,7 +215,7 @@ def simulate(compiled: CompiledTGraph,
                          sum(1 for x in tg.tasks.values() if x.is_comm),
                          len(per_op))
 
-    if cfg.mode in ("mpk", "mpk_dyn"):
+    if cfg.mode in ("mpk", "mpk_dyn", "mpk_tp"):
         # ---- replay the compiler's worker partition (paper §5) ----
         # The partition IS the schedule the megakernel executes: static
         # per-worker queues cut out of the linearized order, synchronized
@@ -205,8 +225,27 @@ def simulate(compiled: CompiledTGraph,
         # an ad-hoc greedy lane assignment.
         part = compiled.partition
 
-        def base_time_fn(task, is_stalled):
-            return _task_time(task, cfg, is_stalled)
+        if cfg.mode == "mpk_tp" and cfg.tp > 1:
+            # multi-chip: collectives charge the lockstep ring expansion
+            # (or the whole-tensor baseline), everything else is the
+            # single-chip cost — the repo's TP model keeps global shapes
+            from ..distributed.comm_tasks import (ring_duration,
+                                                  serialized_duration)
+
+            def _wire(nbytes):
+                return comm_time(nbytes, ici_bw=cfg.ici_bw,
+                                 latency=cfg.comm_latency)
+            coll_fn = (serialized_duration
+                       if cfg.comm_plan == "serialized" else ring_duration)
+
+            def base_time_fn(task, is_stalled):
+                if task.is_comm and not task.is_dummy:
+                    span_words = int(task.bytes_moved() // 4)
+                    return coll_fn(span_words, cfg.tp, time_fn=_wire)
+                return _task_time(task, cfg, is_stalled)
+        else:
+            def base_time_fn(task, is_stalled):
+                return _task_time(task, cfg, is_stalled)
 
         def wait_fn(task):
             return (cfg.jit_hop if task.launch_mode == "jit"

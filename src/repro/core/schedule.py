@@ -46,8 +46,9 @@ import dataclasses
 import heapq
 from typing import Callable, Dict, List, Set, Tuple
 
-from ..roofline.hw import (AOT_EVENT_WAIT, COMM_LATENCY, COMPUTE_LATENCY,
-                           JIT_HOP, TASK_OVERHEAD, TPU_V5E, WORKERS_PER_CHIP)
+from ..roofline.hw import (AOT_EVENT_WAIT, COMPUTE_LATENCY, JIT_HOP,
+                           TASK_OVERHEAD, TPU_V5E, WORKERS_PER_CHIP,
+                           comm_time)
 from .linearize import LinearizedTGraph, linearize
 from .tgraph import TGraph
 
@@ -70,7 +71,6 @@ __all__ = [
 #: can't drift
 _WORKER_FLOPS = TPU_V5E.peak_flops_bf16 / WORKERS_PER_CHIP
 _WORKER_BW = TPU_V5E.hbm_bw / WORKERS_PER_CHIP
-_ICI_BW = TPU_V5E.ici_link_bw
 
 
 def critical_path_depths(tg: TGraph) -> Dict[int, float]:
@@ -279,7 +279,7 @@ def default_task_time(task, stalled: bool = False) -> float:
     if task.is_dummy:
         return 0.0
     if task.is_comm:
-        return task.bytes_moved() / _ICI_BW + COMM_LATENCY
+        return comm_time(task.bytes_moved())
     load = task.bytes_moved() / _WORKER_BW
     comp = task.flops() / _WORKER_FLOPS + COMPUTE_LATENCY
     if stalled:

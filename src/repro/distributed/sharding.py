@@ -13,6 +13,14 @@ Per-shape adaptations (constructed via ``ShardingPolicy.for_shape``):
                   over model when KV heads don't divide the model axis
   long-context  — batch=1: KV/state seq over (pod,data) and heads over
                   model, i.e. flash-decoding across the whole pod
+
+This module drives XLA/GSPMD sharding for the jit backends.  The
+megakernel has its own multi-chip path: ``mpk.compile(..., tp=N)``
+lowers the collectives the "model" axis implies here to first-class
+COMM task descriptors (``distributed/comm_tasks`` chunked
+ring-allreduce, stamped into per-chip task tables by
+``kernels/megakernel/desc.stamp_multichip``) instead of relying on the
+XLA partitioner.
 """
 from __future__ import annotations
 

@@ -1,6 +1,6 @@
-from .desc import MegakernelPlan, MegakernelProgram, lower_tgraph
-from .ops import (MegakernelExecutor, compile_decode_megakernel,
-                  run_megakernel)
+from .desc import (MegakernelPlan, MegakernelProgram, lower_tgraph,
+                   stamp_multichip)
+from .ops import MegakernelExecutor, compile_decode_megakernel
 
 __all__ = ["MegakernelPlan", "MegakernelProgram", "MegakernelExecutor",
-           "lower_tgraph", "compile_decode_megakernel", "run_megakernel"]
+           "lower_tgraph", "stamp_multichip", "compile_decode_megakernel"]

@@ -118,7 +118,8 @@ from ...core.compile import CompiledTGraph
 from ...core.graph import OpKind
 
 __all__ = ["KIND_CODES", "DESC_WORDS", "STATS_WORDS", "PER_STEP_INPUTS",
-           "MegakernelPlan", "MegakernelProgram", "lower_tgraph"]
+           "MegakernelPlan", "MegakernelProgram", "lower_tgraph",
+           "stamp_multichip"]
 
 #: graph inputs that change every decode step — everything else in the heap
 #: (weights, caches, SSM/conv state) is uploaded once and lives on device
@@ -152,7 +153,28 @@ KIND_CODES = {
     OpKind.MOE_COMBINE: 11,
     OpKind.SSM_UPDATE: 12,
     OpKind.CONV1D_UPDATE: 13,
+    "remote_copy": 14,              # COMM: neighbour send (chunk → peer
+                                    #       staging, then event signal)
+    OpKind.ALLREDUCE: 15,           # COMM: owner-masked init / arrival
+                                    #       accumulate / arrival store
 }
+
+#: COMM task codes (the multi-chip subsystem, ``distributed/comm_tasks``).
+#: Both kinds move a per-row column window over ``m`` (word 1) rows —
+#: chunking the REAL row width keeps the pad columns of ld-aligned
+#: tensors out of the chunk partition, so every chip's owned chunk
+#: carries live data.  ``REMOTE_COPY`` words: 1 rows, 3 window words per
+#: row, 4 dst_off (peer chip's staging, absolute, packed), 5 dst row
+#: stride, 6 src_off, 7 src row stride, 10 comm semaphore lane (= peer
+#: chip; consumed by the real remote-DMA path, informational under the
+#: fused transport), 21 peer chip, 22 chunk id, 23 chunk count; the
+#: arrival event it signals rides the standard word 34.
+#: ``ALLREDUCE_CHUNK`` words: 1/3/4/5/6/7 as above, 14 arrival mode
+#: (0 owner-masked init / 1 accumulate / 2 store), 15 owned-window start
+#: (window-relative cols, init only), 16 owned-window length, 21-23 as
+#: above; its wait rides the standard words 32-33.
+REMOTE_COPY_CODE = 14
+AR_CHUNK_CODE = 15
 
 _ACT_IDS = {None: 0, "identity": 0, "silu": 1, "gelu": 2}
 
@@ -223,6 +245,15 @@ class MegakernelPlan:
     qc_offset: int = 0
     #: heap offset of the pop trace (one word per grid slot)
     trace_offset: int = 0
+    #: chips of the stamped multichip plan (1 = single-chip).  At C > 1
+    #: the heap is C per-chip tensor regions (each ``chip_stride`` words,
+    #: the fused transport of ``distributed/comm_tasks``) followed by the
+    #: shared event table, the collectives' staging buffers and the
+    #: per-worker stats blocks; the grid is ``C * num_workers`` lanes
+    #: wide per chip-stamped step.
+    n_chips: int = 1
+    #: words per per-chip tensor region (0 when single-chip)
+    chip_stride: int = 0
 
     # ------------------------------------------------- pipeline contract
     def pipeline_stats(self) -> Dict[str, Any]:
@@ -266,21 +297,27 @@ class MegakernelPlan:
                 "weights": weights}
 
     def build_heap(self, bindings: Dict[str, np.ndarray]) -> np.ndarray:
+        """Pack bindings into the heap — replicated into every chip's
+        region under a multichip plan (the TP model's SPMD inputs)."""
         heap = np.zeros((self.heap_size,), np.float32)
         g = self.compiled.graph
         for name in g.inputs:
             slot = self.layout[name]
             a = np.asarray(bindings[name], np.float32)
             a2 = a.reshape(slot.rows, a.shape[-1] if a.ndim else 1)
-            view = heap[slot.offset : slot.offset + slot.rows * slot.ld]
-            view = view.reshape(slot.rows, slot.ld)
-            view[:, : a2.shape[1]] = a2
+            for c in range(max(1, self.n_chips)):
+                base = slot.offset + c * self.chip_stride
+                view = heap[base : base + slot.rows * slot.ld]
+                view = view.reshape(slot.rows, slot.ld)
+                view[:, : a2.shape[1]] = a2
         return heap
 
-    def read_output(self, heap: np.ndarray, name: str) -> np.ndarray:
+    def read_output(self, heap: np.ndarray, name: str,
+                    chip: int = 0) -> np.ndarray:
         slot = self.layout[name]
         cols = slot.shape[-1]
-        view = heap[slot.offset : slot.offset + slot.rows * slot.ld]
+        base = slot.offset + chip * self.chip_stride
+        view = heap[base : base + slot.rows * slot.ld]
         return view.reshape(slot.rows, slot.ld)[:, :cols].reshape(slot.shape)
 
 
@@ -693,12 +730,29 @@ def lower_tgraph(compiled: CompiledTGraph, cfg,
             d[15] = wconv * state.ld                 # batch stride
             d[10], d[11] = w.elem(0, c0), w.ld
             d[12] = sl(3).elem(c0) if len(ins) > 3 else -1
+        elif kind == OpKind.ALLREDUCE:
+            # single-chip lowering: an identity ALLREDUCE_CHUNK whose
+            # owned span is the whole tile (the repo's TP model keeps
+            # global shapes — one shard's schedule with the collective as
+            # a task).  ``stamp_multichip`` replaces this placeholder
+            # with the chunked-ring expansion at tp > 1.
+            src = sl(0)
+            assert c0 == 0 and src.ld == out.ld, \
+                "allreduce tasks must span whole rows of an ld-matched pair"
+            d[3] = n                         # per-row window = REAL width
+            d[6], d[7] = src.elem(r0, 0), src.ld
+            d[14] = 0                        # arrival mode: init
+            d[15], d[16] = 0, n              # owned window = everything
+            d[21], d[22], d[23] = -1, 0, 1   # peer / chunk id / count
         else:
             raise NotImplementedError(f"megakernel lowering for {kind}")
 
     # ---- post-pass statics from the descriptor table ----
     kinds = descs[:, 0]
-    statics["TM"] = int(descs[:, 1].max(initial=1))
+    # compute-tile scratch sizing only: COMM rows stream through the sR
+    # block scratch, so an atomic collective's row count (= full batch)
+    # must not inflate TM
+    statics["TM"] = int(descs[kinds < REMOTE_COPY_CODE, 1].max(initial=1))
     attn = kinds == KIND_CODES[OpKind.ATTENTION_DECODE]
     statics["NG"] = int(descs[attn, 16].max(initial=1))
     statics["S_MAX"] = int(descs[attn, 3].max(initial=1))
@@ -751,6 +805,235 @@ def lower_tgraph(compiled: CompiledTGraph, cfg,
     return MegakernelPlan(compiled, grid, layout, heap_size, statics,
                           stats_offset, W, num_steps, event_offset,
                           num_events)
+
+
+#: descriptor words holding absolute heap element offsets, per kind code
+#: — the multichip stamper shifts exactly these (when >= 0; -1 marks an
+#: absent optional operand) by the target chip's region base.  Words
+#: 21-23 of the COMM kinds are peer/chunk metadata, NOT offsets.
+_OFFSET_WORDS = {
+    0: (),
+    KIND_CODES[OpKind.MATMUL]: (4, 6, 8, 10),
+    KIND_CODES[OpKind.RMSNORM]: (4, 6, 10),
+    KIND_CODES[OpKind.ROPE]: (4, 6, 19),
+    KIND_CODES[OpKind.GLU_MUL]: (4, 6, 8),
+    KIND_CODES[OpKind.RESIDUAL_ADD]: (4, 6, 8),   # ELEMENTWISE shares 5
+    KIND_CODES[OpKind.ATTENTION_DECODE]: (4, 6, 8, 10, 12),
+    KIND_CODES[OpKind.CACHE_UPDATE]: (4, 6, 12),
+    KIND_CODES[OpKind.EMBED_LOOKUP]: (4, 6, 8),
+    KIND_CODES[OpKind.SOFTMAX_TOPK]: (4, 6),
+    KIND_CODES[OpKind.MOE_GATHER_GEMM]: (4, 6, 8, 10, 19),
+    KIND_CODES[OpKind.MOE_COMBINE]: (4, 6, 10),
+    KIND_CODES[OpKind.SSM_UPDATE]: (4, 6, 8, 10, 12, 19, 21, 23),
+    KIND_CODES[OpKind.CONV1D_UPDATE]: (4, 6, 8, 10, 12),
+    REMOTE_COPY_CODE: (4, 6),
+    AR_CHUNK_CODE: (4, 6),
+}
+
+
+def _noop_row() -> np.ndarray:
+    d = np.zeros(DESC_WORDS, np.int32)
+    d[32] = -1
+    d[34] = -1
+    return d
+
+
+def _comm_desc(t, d0: np.ndarray, c: int, stage_sz: int, sbase: int,
+               ebase: int, chip_stride: int, n_chips: int) -> np.ndarray:
+    """Lower one :class:`~...distributed.comm_tasks.CommTask` of the
+    placeholder ``d0``'s ring expansion to a descriptor row for chip
+    ``c``.  The moved unit is a per-row column window (``m`` rows of the
+    placeholder's tile, real width chunked — pad columns never enter the
+    ring).  ``sbase`` is the collective's staging base (2 packed phase
+    buffers of ``stage_sz`` words per chip); ``ebase`` its comm-event
+    base index."""
+    from ...distributed.comm_tasks import MODE_INIT
+    d = _noop_row()
+    m, out_ld, src_ld = int(d0[1]), int(d0[5]), int(d0[7])
+    out0 = int(d0[4]) + c * chip_stride      # chip c's output tile base
+    src0 = int(d0[6]) + c * chip_stride      # chip c's input tile base
+    stage = lambda chip, phase: sbase + (chip * 2 + phase) * stage_sz
+    d[1] = m
+    d[21], d[22], d[23] = t.peer, t.chunk, n_chips
+    if t.kind == "init":
+        d[0] = AR_CHUNK_CODE
+        d[14] = MODE_INIT
+        d[3] = t.nwords
+        d[4], d[5] = out0, out_ld
+        d[6], d[7] = src0, src_ld
+        d[15], d[16] = t.own_start, t.own_len
+    elif t.kind == "send":
+        d[0] = REMOTE_COPY_CODE
+        d[3] = t.nwords
+        d[6], d[7] = out0 + t.start, out_ld
+        d[4], d[5] = stage(t.peer, t.phase), t.nwords   # packed staging
+        d[10] = t.peer                       # comm semaphore lane
+        d[34] = ebase + t.sig_ev             # peer's arrival event
+    else:                                    # recv (accumulate / store)
+        d[0] = AR_CHUNK_CODE
+        d[14] = t.mode
+        d[3] = t.nwords
+        d[6], d[7] = stage(c, t.phase), t.nwords
+        d[4], d[5] = out0 + t.start, out_ld
+        d[32], d[33] = ebase + t.wait_ev, 1
+    return d
+
+
+def stamp_multichip(plan: MegakernelPlan, n_chips: int) -> MegakernelPlan:
+    """Stamp a single-chip static plan into a ``C``-chip fused-transport
+    plan (paper §6.5 + Event Tensor's comm-as-tasks).
+
+    The descriptor grid is replicated per chip — worker lane ``c*W + w``
+    is chip ``c``'s worker ``w``; every heap offset shifts by the chip's
+    region base and every event id by the chip's event block — and each
+    ``ALLREDUCE`` placeholder step is replaced by the
+    ``comm_tasks.expand_ring_allreduce`` sequence over the tile's REAL
+    row width (chunks are per-row column windows — pad columns stay out
+    of the ring) inserted as full-width grid steps: at inserted step
+    ``t`` every chip runs its ring task of relative step ``t`` on the
+    worker lane that owned the placeholder (all other lanes pad with
+    noops).  Because all chips' expansions are
+    step-aligned and every receive's matching send sits at a strictly
+    earlier relative step, the stamped grid stays dependency-safe under
+    step-major execution — the kernel's event-wait violation counter
+    (asserted zero) checks exactly this.
+
+    The "chips" are a lowering concept: the stamped plan still executes
+    as ONE ``pallas_call`` whose heap concatenates the per-chip tensor
+    regions (the *fused transport*), so the whole TP group remains a
+    single megakernel and CPU CI exercises the full protocol.  On real
+    multi-chip hardware the same descriptors drive
+    ``pltpu.make_async_remote_copy`` against the peer's heap instead
+    (the gated ``REMOTE_DMA`` path in ``kernel.py``) — only the
+    transport changes, never the task table.
+
+    Prefetch plan: a slot's words 24-26 must describe its stream
+    successor, so the pre-insertion predecessor's prefetch moves onto
+    the LAST inserted row of each worker lane (safe: any consumer whose
+    primary tile overlaps the collective's output was already hazard-
+    blocked to a demand load by the base plan, and ring writes touch
+    only the collective's span and the staging region).
+    """
+    from ...distributed.comm_tasks import (expand_ring_allreduce,
+                                           n_comm_events, n_ring_steps)
+    assert plan.scheduler == "static", \
+        "multichip stamping requires the static scheduler"
+    C = n_chips
+    if C <= 1:
+        return plan
+    W = plan.num_workers
+    S0 = plan.num_steps
+    Wt = C * W
+    grid0 = plan.descs
+    chip_stride = plan.event_offset          # words per chip region
+    nev0 = plan.num_events
+
+    # collectives in (step, worker) order; staging + comm-event bases
+    colls = [(s, w) for s in range(S0) for w in range(W)
+             if grid0[s * W + w, 0] == AR_CHUNK_CODE]
+    event_off = C * chip_stride
+    n_comm_ev = len(colls) * n_comm_events(C)
+    stage_bases: Dict[Tuple[int, int], int] = {}
+    stage_szs: Dict[Tuple[int, int], int] = {}
+    ev_bases: Dict[Tuple[int, int], int] = {}
+    cursor = event_off + C * nev0 + n_comm_ev
+    for i, (s, w) in enumerate(colls):
+        # packed per-(chip, phase) staging: m rows x the widest chunk of
+        # the collective's REAL row width (pad cols never hit the wire)
+        d0 = grid0[s * W + w]
+        stage_szs[(s, w)] = int(d0[1]) * -(-int(d0[2]) // C)
+        stage_bases[(s, w)] = cursor
+        cursor += 2 * C * stage_szs[(s, w)]
+        ev_bases[(s, w)] = C * nev0 + i * n_comm_events(C)
+
+    def stamp_row(row: np.ndarray, c: int) -> np.ndarray:
+        d = row.copy()
+        for wd in _OFFSET_WORDS[int(d[0])]:
+            if d[wd] >= 0:
+                d[wd] += c * chip_stride
+        if d[26] > 0:                        # prefetch plan source
+            d[24] += c * chip_stride
+        if d[30] > 0:                        # own primary record
+            d[28] += c * chip_stride
+        if d[32] >= 0:
+            d[32] += c * nev0
+        if d[34] >= 0:
+            d[34] += c * nev0
+        return d
+
+    blocks: List[np.ndarray] = []
+    for s in range(S0):
+        ph = {w: grid0[s * W + w] for w in range(W)
+              if grid0[s * W + w, 0] == AR_CHUNK_CODE}
+        if not ph:
+            block = np.zeros((Wt, DESC_WORDS), np.int32)
+            for c in range(C):
+                for w in range(W):
+                    block[c * W + w] = stamp_row(grid0[s * W + w], c)
+            blocks.append(block)
+            continue
+        K = n_ring_steps(C)
+        ring: Dict[Tuple[int, int, int], np.ndarray] = {}
+        for w, d0 in ph.items():
+            for t in expand_ring_allreduce(int(d0[2]), C):
+                ring[(w, t.chip, t.step)] = _comm_desc(
+                    t, d0, t.chip, stage_szs[(s, w)],
+                    stage_bases[(s, w)], ev_bases[(s, w)],
+                    chip_stride, C)
+        for ti in range(K):
+            block = np.tile(_noop_row(), (Wt, 1))
+            for c in range(C):
+                for w in range(W):
+                    lane = c * W + w
+                    if w in ph:
+                        row = ring[(w, c, ti)].copy()
+                        d0 = ph[w]
+                        if ti == 0 and d0[32] >= 0:
+                            # init inherits the placeholder's wait
+                            row[32] = d0[32] + c * nev0
+                            row[33] = d0[33]
+                        if ti == K - 1:
+                            # the final store inherits the placeholder's
+                            # consumer signal and its moved prefetch
+                            if d0[34] >= 0:
+                                row[34] = d0[34] + c * nev0
+                            if d0[26] > 0:
+                                row[24:27] = d0[24:27]
+                                row[24] += c * chip_stride
+                        block[lane] = row
+                    elif ti == 0:
+                        row = stamp_row(grid0[s * W + w], c)
+                        row[24:27] = 0       # moved to the last block
+                        block[lane] = row
+                    elif ti == K - 1:
+                        src = grid0[s * W + w]
+                        if src[26] > 0:
+                            row = block[lane].copy()
+                            row[24:27] = src[24:27]
+                            row[24] += c * chip_stride
+                            block[lane] = row
+            blocks.append(block)
+
+    grid = np.concatenate(blocks).astype(np.int32)
+    S = len(blocks)
+    # re-assert the prefetch pair invariant on the stamped grid: a
+    # consumer's own record must equal its stream predecessor's plan
+    for row in range(Wt, S * Wt):
+        if grid[row, 27] == 1:
+            assert (grid[row - Wt, 24:27] == grid[row, 28:31]).all(), row
+
+    stats_off = cursor
+    # +256: the comm span copies run in 256-word masked blocks, so the
+    # last block of a span may read (never write) past its end
+    heap_size = stats_off + STATS_WORDS * Wt + 256
+    statics = dict(plan.statics)
+    statics.update({"W": Wt, "NUM_STEPS": S, "EVENT_OFF": event_off,
+                    "N_EVENTS": C * nev0 + n_comm_ev,
+                    "STATS_OFF": stats_off, "N_CHIPS": C})
+    return MegakernelPlan(plan.compiled, grid, plan.layout, heap_size,
+                          statics, stats_off, Wt, S, event_off,
+                          C * nev0 + n_comm_ev, n_chips=C,
+                          chip_stride=chip_stride)
 
 
 def _lower_dynamic(compiled: CompiledTGraph, cfg, descs: np.ndarray,

@@ -97,11 +97,17 @@ from jax.experimental.pallas import tpu as pltpu
 from ...runtime.dyn_sched import QUEUE_EMPTY
 from .desc import DESC_WORDS, STATS_WORDS
 
-__all__ = ["make_megakernel", "make_count"]
+__all__ = ["make_megakernel", "make_count", "COMM_BLOCK"]
 
 #: occupied/empty discriminator for ready-pool slots (row ids sit far
 #: below, the QUEUE_EMPTY sentinel far above)
 _QTH = QUEUE_EMPTY / 2
+
+#: word width of one COMM span-copy block: the chunked collectives
+#: (kinds 14/15) move flat heap spans in masked 256-word blocks through
+#: the ``sR`` scratch — the stamper reserves a trailing heap pad so the
+#: last block of a span may read (never write) past its end
+COMM_BLOCK = 256
 
 #: incremented on every ``make_megakernel`` call — the compile-count hook
 #: used by tests to assert the Program API builds the kernel exactly once
@@ -161,14 +167,21 @@ def make_megakernel(statics: Dict[str, Any], num_steps: int,
     QC_OFF = statics.get("QC_OFF", 0)
     TRACE_OFF = statics.get("TRACE_OFF", 0)
     MAX_OUT = statics.get("MAX_OUT", 0)
+    #: real multi-chip transport: when set, REMOTE_COPY descriptors
+    #: issue ``pltpu.make_async_remote_copy`` against the PEER chip's
+    #: heap (one program instance per chip under shard_map) instead of
+    #: the fused in-heap copy.  Requires actual TPU devices — CPU/
+    #: interpret CI always runs the fused transport (N_CHIPS regions in
+    #: one heap), which executes the identical task table.
+    RDMA = bool(statics.get("REMOTE_DMA", 0))
 
     def kernel(desc, *rest):
         if DYN:
             (sched, heap_in, heap, sA, sB, sC, sD, acc, acc2, sP, sE,
-             cnt, sem, psem, sQ, sS) = rest
+             cnt, sR, sem, psem, rsend, rrecv, sQ, sS) = rest
         else:
             (heap_in, heap, sA, sB, sC, sD, acc, acc2, sP, sE,
-             cnt, sem, psem) = rest
+             cnt, sR, sem, psem, rsend, rrecv) = rest
         s = pl.program_id(0)                # grid step (shared time axis)
         w_id = pl.program_id(1)             # worker lane
         slot = jax.lax.rem(s, 2)            # A side: this step's operands
@@ -587,6 +600,105 @@ def make_megakernel(statics: Dict[str, Any], num_steps: int,
 
         cols = jax.lax.iota(jnp.int32, TN)
 
+        # --------------- COMM span engine (kinds 14/15, multichip TP) ---
+        # A per-row column window (m rows, independent src/dst row
+        # strides — the chunk partition covers the REAL row width, so ld
+        # pad columns never ride the ring) moves in COMM_BLOCK-word
+        # masked blocks through the sR scratch: load the source block
+        # and the current destination block, combine, write back with
+        # words past the window restored from the loaded destination
+        # (reads may run past the window into the neighbouring columns
+        # or the stamper's trailing pad; writes never do).  Sequential
+        # interpret-mode execution makes the read-modify-write exact —
+        # on real hardware each chip only ever combines into its OWN
+        # output windows and staging buffers, so the blocks race with
+        # nothing.
+        def span_op(src0, s_ld, dst0, d_ld, m, nwords, combine):
+            nblk = (nwords + COMM_BLOCK - 1) // COMM_BLOCK
+
+            @pl.when(nwords > 0)
+            def _():
+                _count(3 * nblk * m)    # src load + dst load + writeback
+
+            lane0 = jax.lax.iota(jnp.int32, COMM_BLOCK)
+
+            def row_body(r, _):
+                sbase = src0 + r * s_ld
+                dbase = dst0 + r * d_ld
+
+                def body(i, _):
+                    base = i * COMM_BLOCK
+                    cps = pltpu.make_async_copy(
+                        heap.at[pl.ds(sbase + base, COMM_BLOCK)],
+                        sR.at[0, pl.ds(0, COMM_BLOCK)], sem)
+                    cps.start()
+                    cps.wait()
+                    cpd = pltpu.make_async_copy(
+                        heap.at[pl.ds(dbase + base, COMM_BLOCK)],
+                        sR.at[1, pl.ds(0, COMM_BLOCK)], sem)
+                    cpd.start()
+                    cpd.wait()
+                    rel = lane0 + base      # window-relative col index
+                    new = combine(sR[0, :], sR[1, :], rel)
+                    sR[1, :] = jnp.where(rel < nwords, new, sR[1, :])
+                    cpo = pltpu.make_async_copy(
+                        sR.at[1, pl.ds(0, COMM_BLOCK)],
+                        heap.at[pl.ds(dbase + base, COMM_BLOCK)], sem)
+                    cpo.start()
+                    cpo.wait()
+                    return 0
+                jax.lax.fori_loop(0, nblk, body, 0)
+                return 0
+            jax.lax.fori_loop(0, m, row_body, 0)
+
+        def k_remote_copy():
+            """COMM neighbour send: copy this chip's chunk into the peer
+            chip's staging buffer; the arrival event signal rides the
+            standard word-34 path after the copy lands (the in-heap
+            event table mirrors the cross-chip counters)."""
+            if RDMA:
+                # real transport: the same per-row windows stream to the
+                # peer chip (word 21) through the chip-to-chip
+                # interconnect; the send/recv DMA semaphore pair tracks
+                # wire completion, the arrival counter still rides
+                # word 34.
+                nblk = (d(3) + COMM_BLOCK - 1) // COMM_BLOCK
+
+                def row_body(r, _):
+                    def body(i, _):
+                        base = i * COMM_BLOCK
+                        cp = pltpu.make_async_remote_copy(
+                            src_ref=heap.at[pl.ds(
+                                d(6) + r * d(7) + base, COMM_BLOCK)],
+                            dst_ref=heap.at[pl.ds(
+                                d(4) + r * d(5) + base, COMM_BLOCK)],
+                            send_sem=rsend, recv_sem=rrecv,
+                            device_id=d(21),
+                            device_id_type=pltpu.DeviceIdType.LOGICAL)
+                        cp.start()
+                        cp.wait()
+                        return 0
+                    jax.lax.fori_loop(0, nblk, body, 0)
+                    return 0
+                jax.lax.fori_loop(0, d(1), row_body, 0)
+            else:
+                span_op(d(6), d(7), d(4), d(5), d(1), d(3),
+                        lambda s, dv, rel: s)
+
+        def k_ar_chunk():
+            """COMM arrival/init: owner-masked init (mode 0, keep only
+            the owned columns of the replicated input — what makes the
+            ring reduction bitwise-exact), accumulate a staged chunk
+            (mode 1, reduce-scatter arrival) or store it (mode 2,
+            all-gather arrival)."""
+            def combine(s, dv, rel):
+                owned = jnp.logical_and(rel >= d(15),
+                                        rel < d(15) + d(16))
+                init = jnp.where(owned, s, 0.0)
+                return jnp.where(d(14) == 0, init,
+                                 jnp.where(d(14) == 1, dv + s, s))
+            span_op(d(6), d(7), d(4), d(5), d(1), d(3), combine)
+
         # ------------------------------------------------------------ kinds
         def k_noop():
             pass
@@ -888,7 +1000,7 @@ def make_megakernel(statics: Dict[str, Any], num_steps: int,
             jax.lax.switch(d(0), [
                 k_noop, k_matmul, k_rmsnorm, k_rope, k_glu, k_resid,
                 k_attn, k_cache_update, k_embed, k_softmax_topk, k_moe_gg,
-                k_moe_combine, k_ssm, k_conv,
+                k_moe_combine, k_ssm, k_conv, k_remote_copy, k_ar_chunk,
             ])
 
         if DYN:
@@ -982,8 +1094,11 @@ def make_megakernel(statics: Dict[str, Any], num_steps: int,
                                                    #     double buffer)
         pltpu.VMEM((1, 8), jnp.float32),           # sE (event counter)
         pltpu.VMEM((W, STATS_WORDS), jnp.float32),  # cnt (per-worker)
+        pltpu.VMEM((2, COMM_BLOCK), jnp.float32),  # sR (comm span blocks)
         pltpu.SemaphoreType.DMA,                   # sem (bulk tiles)
         pltpu.SemaphoreType.DMA((W, 2)),           # psem (worker, slot)
+        pltpu.SemaphoreType.DMA,                   # rsend (remote DMA)
+        pltpu.SemaphoreType.DMA,                   # rrecv (remote DMA)
     ]
     if DYN:
         scratch_shapes += [

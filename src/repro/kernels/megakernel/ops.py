@@ -16,8 +16,13 @@ into a live program:
   small scatter into the heap (``at[idx].set``) instead of a host-side
   full-heap rebuild.
 
-``run_megakernel`` survives as the deprecated one-shot wrapper (rebuilds
-the heap and retraces per call) — new code should use ``repro.api``.
+``tp > 1`` compiles the TP-sharded graph and stamps the plan into a
+multi-chip task table (``desc.stamp_multichip``): per-chip descriptor
+streams with first-class COMM tasks executing the chunked ring-allreduce
+of ``distributed/comm_tasks.py`` over the fused per-chip heap regions.
+The executor replicates inputs into every chip region; logits are read
+from chip 0 (all chips hold bit-identical outputs, asserted by the
+tests).
 """
 from __future__ import annotations
 
@@ -29,12 +34,11 @@ import numpy as np
 
 from ...core.compile import CompileOptions, megakernelize
 from ...core.decompose import DecomposeConfig
-from ...core.lowering import build_decode_graph, decode_bindings
-from .desc import MegakernelPlan, lower_tgraph
+from ...core.lowering import build_decode_graph
+from .desc import MegakernelPlan, lower_tgraph, stamp_multichip
 from .kernel import make_megakernel
 
-__all__ = ["compile_decode_megakernel", "MegakernelExecutor",
-           "run_megakernel"]
+__all__ = ["compile_decode_megakernel", "MegakernelExecutor"]
 
 
 def compile_decode_megakernel(cfg, batch: int, max_seq: int,
@@ -43,7 +47,8 @@ def compile_decode_megakernel(cfg, batch: int, max_seq: int,
                               event_fusion: bool = True,
                               pipeline_depth: int = 2,
                               num_workers: int = 1,
-                              scheduler: str = "static"
+                              scheduler: str = "static",
+                              tp: int = 1
                               ) -> MegakernelPlan:
     """Lower cfg's decode step end-to-end: op graph → tGraph → descriptors.
 
@@ -56,8 +61,17 @@ def compile_decode_megakernel(cfg, batch: int, max_seq: int,
     ``scheduler="dynamic"`` replaces the static streams with the
     heap-resident ready queues of ``runtime/dyn_sched.py`` — pop →
     wait → compute → signal-and-enqueue per grid slot.
+    ``tp > 1`` inserts AllReduce ops into the graph (paper §6.5) and
+    stamps the lowered plan into per-chip task tables whose collectives
+    run as in-kernel COMM tasks (static scheduler only for now — the
+    dynamic scheduler's ready queues are per-chip-heap state that the
+    stamper does not replicate yet).
     """
-    g = build_decode_graph(cfg, batch, max_seq)
+    if tp > 1 and scheduler != "static":
+        raise NotImplementedError(
+            "tp > 1 megakernels require scheduler='static' (the dynamic "
+            "ready queues are not chip-stamped yet)")
+    g = build_decode_graph(cfg, batch, max_seq, tp=tp)
     opts = CompileOptions(
         decompose=DecomposeConfig(max_rows=max_rows),
         latency_aware_schedule=latency_aware,
@@ -67,7 +81,10 @@ def compile_decode_megakernel(cfg, batch: int, max_seq: int,
         scheduler=scheduler,
     )
     compiled = megakernelize(g, opts)
-    return lower_tgraph(compiled, cfg, scheduler=scheduler)
+    plan = lower_tgraph(compiled, cfg, scheduler=scheduler)
+    if tp > 1:
+        plan = stamp_multichip(plan, tp)
+    return plan
 
 
 class MegakernelExecutor:
@@ -91,6 +108,12 @@ class MegakernelExecutor:
         classes = plan.input_classes()
         self._per_step: List[str] = classes["per_step"]
         self._state_inputs: List[str] = classes["state"]
+        # multi-chip plans mirror every tensor slot into C per-chip heap
+        # regions; per-step scatters and state resets replicate across
+        # the mirrors, reads (logits, read_state) come from chip 0
+        self._n_chips = max(1, plan.n_chips)
+        self._chip_offsets = (np.arange(self._n_chips, dtype=np.int64)
+                              * plan.chip_stride)
 
         # ---- flat heap indices of every per-step input element ----
         idx_parts, self._entries = [], []
@@ -101,7 +124,8 @@ class MegakernelExecutor:
                     + np.arange(slot.rows)[:, None] * slot.ld
                     + np.arange(cols)[None, :])
             self._entries.append((name, slot.rows, cols))
-            idx_parts.append(grid.ravel())
+            idx_parts.append((grid.ravel()[None, :]
+                              + self._chip_offsets[:, None]).ravel())
         # the in-heap event-counter table is re-zeroed through the same
         # per-step scatter (the kernel increments counters during the
         # launch, so every launch starts from a clean table)
@@ -139,8 +163,15 @@ class MegakernelExecutor:
             self._state_spans.append((name, slot.rows, slot.ld, cols))
             span_idx.append(np.arange(slot.offset,
                                       slot.offset + slot.rows * slot.ld))
-        self._state_span_idx = jnp.asarray(
-            np.concatenate(span_idx).astype(np.int32)) if span_idx else None
+        if span_idx:
+            span0 = np.concatenate(span_idx)
+            self._state_span_idx = jnp.asarray(span0.astype(np.int32))
+            self._state_span_idx_all = jnp.asarray(
+                (span0[None, :] + self._chip_offsets[:, None])
+                .ravel().astype(np.int32))
+        else:
+            self._state_span_idx = None
+            self._state_span_idx_all = None
         self.state_scatter_count = 0
 
         # ---- the ONE kernel + the ONE jitted step ----
@@ -170,15 +201,19 @@ class MegakernelExecutor:
 
     # ------------------------------------------------------------ helpers
     def _state_indices(self, b: int) -> np.ndarray:
-        """Flat heap indices of batch row ``b`` of every state tensor."""
+        """Flat heap indices of batch row ``b`` of every state tensor
+        (replicated across every chip's heap region)."""
         parts = []
         for name in self._state_inputs:
             slot = self.plan.layout[name]
             rpb = slot.rows // slot.shape[0]   # heap rows per batch entry
             lo = slot.offset + b * rpb * slot.ld
             parts.append(np.arange(lo, lo + rpb * slot.ld))
-        return np.concatenate(parts).astype(np.int32) if parts else \
-            np.zeros((0,), np.int32)
+        if not parts:
+            return np.zeros((0,), np.int32)
+        flat = np.concatenate(parts)
+        return (flat[None, :] + self._chip_offsets[:, None]) \
+            .ravel().astype(np.int32)
 
     def _pack_step_inputs(self, tokens_or_embeds, seq_lens,
                           positions=None) -> jax.Array:
@@ -194,7 +229,9 @@ class MegakernelExecutor:
             if self.cfg.mrope_sections is not None and pos.ndim == 1:
                 pos = np.stack([pos] * 3, axis=-1)
             vals["positions"] = pos
-        flat = [np.asarray(vals[name], np.float32).reshape(rows * cols)
+        flat = [np.tile(np.asarray(vals[name],
+                                   np.float32).reshape(rows * cols),
+                        self._n_chips)
                 for name, rows, cols in self._entries]
         if self._n_events:
             flat.append(np.zeros((self._n_events,), np.float32))
@@ -335,8 +372,9 @@ class MegakernelExecutor:
 
     def write_state(self, tensors: Dict[str, np.ndarray]) -> None:
         """Scatter new values for every state tensor into the resident
-        heap (partial update — weights are never re-moved).  ``tensors``
-        maps state input names to graph-shaped arrays."""
+        heap (partial update — weights are never re-moved, the write is
+        replicated into every chip's heap region).  ``tensors`` maps
+        state input names to graph-shaped arrays."""
         assert self._heap is not None, "upload() before write_state()"
         if self._state_span_idx is None:
             return
@@ -346,8 +384,8 @@ class MegakernelExecutor:
             img[:, :cols] = np.asarray(tensors[name],
                                        np.float32).reshape(rows, cols)
             parts.append(img.ravel())
-        vals = jnp.asarray(np.concatenate(parts))
-        self._heap = self._jset(self._heap, self._state_span_idx, vals)
+        vals = jnp.asarray(np.tile(np.concatenate(parts), self._n_chips))
+        self._heap = self._jset(self._heap, self._state_span_idx_all, vals)
         self.state_scatter_count += 1
 
     def run_once(self, bindings: Dict[str, np.ndarray]
@@ -364,14 +402,3 @@ class MegakernelExecutor:
         heap = self.read_heap()
         return {name: self.plan.read_output(heap, name)
                 for name in self.plan.compiled.graph.outputs}
-
-
-def run_megakernel(prog: MegakernelPlan, cfg, params, cache,
-                   tokens_or_embeds, seq_lens,
-                   positions=None) -> Dict[str, np.ndarray]:
-    """DEPRECATED one-shot entry point: rebuilds the heap and retraces the
-    kernel on every call.  Kept for compatibility; use
-    ``repro.api.compile(..., backend="megakernel")`` instead."""
-    bindings = decode_bindings(cfg, params, cache, tokens_or_embeds,
-                               seq_lens, positions)
-    return MegakernelExecutor(prog, cfg).run_once(bindings)

@@ -11,7 +11,8 @@ from __future__ import annotations
 import dataclasses
 
 __all__ = ["HW", "TPU_V5E", "WORKERS_PER_CHIP", "COMPUTE_LATENCY",
-           "TASK_OVERHEAD", "COMM_LATENCY", "AOT_EVENT_WAIT", "JIT_HOP"]
+           "TASK_OVERHEAD", "COMM_LATENCY", "AOT_EVENT_WAIT", "JIT_HOP",
+           "comm_time"]
 
 #: SM/core-equivalent worker lanes one chip is modeled as (the paper's
 #: per-SM task granularity): each worker owns 1/Wth of the chip's peak
@@ -46,3 +47,15 @@ TPU_V5E = HW(
     ici_links=4,
     hbm_bytes=16e9,
 )
+
+
+def comm_time(nbytes: float, *, ici_bw: float = TPU_V5E.ici_link_bw,
+              latency: float = COMM_LATENCY) -> float:
+    """Duration of one inter-chip transfer: ``bytes / ici_bw + latency``.
+
+    The single comm cost model shared by the worker partitioner
+    (``core/schedule.default_task_time``), the runtime simulator
+    (``core/runtime_sim``) and the dynamic-scheduler replay — previously
+    each carried its own copy of this formula.
+    """
+    return nbytes / ici_bw + latency

@@ -1,5 +1,7 @@
 """ShardingPolicy: divisibility guards, spec trees match param trees, and
 the dry-run spec builder lowers on a small in-process mesh."""
+import dataclasses
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -112,6 +114,67 @@ def test_pure_dp_override():
         ShardingPolicy.for_shape(get_config("granite-moe-1b-a400m"), mesh,
                                  SHAPES["train_4k"],
                                  overrides={"pure_dp": True})
+
+
+def test_batch_smaller_than_dp_disables_batch_sharding():
+    """decode batch < dp size: shard_batch turns off, batch axes drop the
+    data spec, and the flash-decode KV-seq fallback lands on the *data*
+    axes (the model axis keeps the heads whenever they divide)."""
+    import numpy as _np
+    devs = _np.array(jax.devices()[:1] * 256).reshape(16, 16)
+    mesh = Mesh(devs, ("data", "model"))
+    small = dataclasses.replace(SHAPES["decode_32k"],
+                                global_batch=3)          # 3 !% 16
+    cfg = get_config("deepseek-7b")                      # kv=32 = 16·2
+    pol = ShardingPolicy.for_shape(cfg, mesh, small)
+    assert not pol.shard_batch and pol.dp is None
+    assert pol.batch_spec(2) == P(None, None)
+    assert pol.act_spec("resid", 2) == (None, None)
+    # non-dividing KV heads + unsharded batch → seq over the data axes
+    cfg2 = get_config("qwen2-vl-2b")                     # kv=2, not /16
+    pol2 = ShardingPolicy.for_shape(cfg2, mesh, small)
+    assert pol2.kv_seq_shard == "dp"
+    cache = jax.eval_shape(lambda: init_cache(cfg2, 3, 64, jnp.bfloat16))
+    assert pol2.cache_specs(cache)["k"][3] == ("data",)
+
+
+def test_kv_nondividing_flash_decode_specs():
+    """KV heads not dividing the model axis: the cache's head axis stays
+    replicated and the seq axis takes the model axis instead — and the
+    kv activation spec drops its head sharding too."""
+    import numpy as _np
+    devs = _np.array(jax.devices()[:1] * 256).reshape(16, 16)
+    mesh = Mesh(devs, ("data", "model"))
+    cfg = get_config("mistral-nemo-12b")                 # kv=8, not /16
+    pol = ShardingPolicy.for_shape(cfg, mesh, SHAPES["decode_32k"])
+    assert pol.kv_seq_shard == "tp"
+    cache = jax.eval_shape(lambda: init_cache(cfg, 128, 64, jnp.bfloat16))
+    spec = pol.cache_specs(cache)["k"]
+    assert spec[3] == "model" and spec[4] is None        # seq, not heads
+    assert pol.act_spec("kv", 3)[1] is None
+
+
+def test_pure_dp_decode_policy():
+    """pure-DP decode: the model axis folds into data parallelism — no
+    TP anywhere (params, acts, caches), batch over the joint axes."""
+    import numpy as _np
+    devs = _np.array(jax.devices()[:1] * 256).reshape(16, 16)
+    mesh = Mesh(devs, ("data", "model"))
+    cfg = get_config("deepseek-7b")
+    pol = ShardingPolicy.for_shape(cfg, mesh, SHAPES["decode_32k"],
+                                   overrides={"pure_dp": True})
+    assert pol.tp_disabled and pol.tp_size == 1 and pol.tp is None
+    assert pol.dp_axes == ("data", "model")
+    params = jax.eval_shape(
+        lambda: init_params(cfg, jax.random.PRNGKey(0), jnp.bfloat16))
+    # the model axis may only appear folded inside the joint dp tuple,
+    # never as a bare TP dimension
+    flat = jax.tree.leaves(pol.param_specs(params),
+                           is_leaf=lambda x: isinstance(x, P))
+    for s in flat:
+        assert all(part != "model" for part in s), \
+            f"bare TP axis leaked into {s}"
+    assert pol.act_spec("mlp_hidden", 3)[-1] is None
 
 
 def test_kv_dtype_override_affects_layout_choice():
