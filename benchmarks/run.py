@@ -19,6 +19,7 @@ SECTIONS = [
     "fig13_overlap",
     "fig14_worker_scaling",
     "fig15_dyn_sched",
+    "trace_reconcile",
     "launch_reduction",
     "serving_load",
     "roofline_table",

@@ -48,6 +48,22 @@ __all__ = ["BACKENDS", "Program", "compile"]
 BACKENDS = ("jax", "interpreter", "megakernel")
 
 
+def _jsonable(obj):
+    """Recursively convert a stats structure to plain JSON types (numpy
+    scalars/arrays included); anything exotic degrades to ``str``."""
+    if isinstance(obj, dict):
+        return {str(k): _jsonable(v) for k, v in obj.items()}
+    if isinstance(obj, (list, tuple)):
+        return [_jsonable(v) for v in obj]
+    if isinstance(obj, np.ndarray):
+        return obj.tolist()
+    if isinstance(obj, np.generic):
+        return obj.item()
+    if isinstance(obj, (bool, int, float, str)) or obj is None:
+        return obj
+    return str(obj)
+
+
 # ---------------------------------------------------------------------------
 # State map: graph state tensors <-> the stacked cache pytree.
 # ---------------------------------------------------------------------------
@@ -287,6 +303,51 @@ class Program:
             "workspace_elements": c.stats["workspace_elements"],
         }
 
+    # -------------------------------------------------- observability
+    def predicted_trace(self):
+        """The compiler's *predicted* per-task timeline as an
+        ``obs.TaskTrace`` (roofline seconds): ``replay_partition`` under
+        the static scheduler, ``simulate_dynamic`` under the dynamic one
+        — the prediction ``obs.reconcile`` checks against an observed
+        trace."""
+        from ..obs import predicted_task_trace
+        part = self.compiled.partition
+        return predicted_task_trace(
+            self.compiled, self.scheduler,
+            num_workers=(part.requested_workers if part is not None
+                         else self.num_workers),
+            pipeline_depth=self.pipeline_depth,
+            tp=getattr(self, "tp", 1))
+
+    def trace(self):
+        """The program's per-task timeline as an ``obs.TaskTrace``.
+
+        Backend semantics: the megakernel returns the kernel-written
+        trace ring (compile with ``trace=True``, run at least one step);
+        the interpreter returns its sequential execution on the same
+        two-ticks-per-task clock; the jax oracle executes whole
+        operators (no per-task timeline exists), so it returns the
+        predicted timeline."""
+        return self.predicted_trace()
+
+    def metrics_snapshot(self, serving: Optional[Dict[str, Any]] = None
+                         ) -> Dict[str, Any]:
+        """One JSON-ready dict joining every metrics surface: program
+        identity (``describe``), compiler stats, the schedule→kernel
+        pipeline contract, the worker/scheduler/COMM counters, and —
+        when a serving engine passes its ``metrics_summary()`` — the
+        TTFT/TPOT/queue latency percentiles."""
+        snap: Dict[str, Any] = {
+            "program": self.describe(),
+            "compiler": dict(self.stats),
+            "pipeline": self.pipeline_stats,
+            "workers": self.worker_stats,
+            "step_count": self.step_count,
+        }
+        if serving is not None:
+            snap["serving"] = dict(serving)
+        return _jsonable(snap)
+
     def __repr__(self) -> str:  # pragma: no cover - cosmetic
         return (f"Program<{self.backend}>({self.cfg.name}, "
                 f"batch={self.batch}, max_seq={self.max_seq})")
@@ -373,11 +434,21 @@ class InterpreterProgram(Program):
         # legal execution of the ready-queue runtime — bitwise-identical
         # results prove order-independence of the compiled tasks)
         self._dyn_order = None
+        self._seq_trace = None
         if self.scheduler == "dynamic":
             from ..runtime.dyn_sched import (build_dyn_sched,
                                              replay_sequential)
             dyn = build_dyn_sched(self._compiled)
-            self._dyn_order = replay_sequential(dyn).task_order(dyn)
+            self._seq_trace = replay_sequential(dyn)
+            self._dyn_order = self._seq_trace.task_order(dyn)
+
+    def trace(self):
+        """The interpreter's sequential execution as an ``obs.TaskTrace``
+        on the kernel ring's two-ticks-per-task clock (dynamic: the
+        protocol replay's pop order/lanes/sources)."""
+        from ..obs import sequential_trace
+        return sequential_trace(self._compiled, self.scheduler,
+                                seq=self._seq_trace)
 
     def bind(self, params) -> "Program":
         self._params = _np_tree(params)
@@ -425,7 +496,7 @@ class PallasProgram(Program):
                  max_rows: int = 8, latency_aware: bool = True,
                  event_fusion: bool = True, pipeline_depth: int = 2,
                  num_workers: int = 1, scheduler: str = "static",
-                 tp: int = 1):
+                 tp: int = 1, trace: bool = False):
         super().__init__(cfg, batch, max_seq, step_cache, pipeline_depth,
                          num_workers, scheduler)
         self.tp = tp
@@ -436,10 +507,23 @@ class PallasProgram(Program):
             cfg, batch, max_seq, max_rows=max_rows,
             latency_aware=latency_aware, event_fusion=event_fusion,
             pipeline_depth=pipeline_depth, num_workers=num_workers,
-            scheduler=scheduler, tp=tp)
+            scheduler=scheduler, tp=tp, trace=trace)
         self._compiled = self.plan.compiled
         self.executor = MegakernelExecutor(self.plan, cfg)
         self._smap = _state_map(cfg)
+
+    def trace(self):
+        """The kernel-written trace ring of the LAST step as an
+        ``obs.TaskTrace`` (logical ticks).  Requires ``trace=True`` at
+        compile and at least one executed step."""
+        from ..obs import decode_ring
+        if not self.plan.trace:
+            raise ValueError("program compiled without trace=True — "
+                             "the kernel wrote no trace ring")
+        if self.step_count == 0:
+            raise ValueError("no step executed yet — the trace ring is "
+                             "empty; run step() first")
+        return decode_ring(self.plan, self.executor.task_ring())
 
     # the compile-once guarantees, surfaced for tests/benchmarks
     @property
@@ -549,7 +633,7 @@ def compile(cfg, batch: int, max_seq: int, backend: str = "jax", *,
             max_rows: Optional[int] = None, latency_aware: bool = True,
             event_fusion: bool = True, pipeline_depth: int = 2,
             num_workers: int = 1, scheduler: str = "static",
-            tp: int = 1) -> Program:
+            tp: int = 1, trace: bool = False) -> Program:
     """Compile ``cfg``'s decode step once; returns a stateful
     :class:`Program` for ``backend`` ("jax" | "interpreter" |
     "megakernel").
@@ -576,7 +660,10 @@ def compile(cfg, batch: int, max_seq: int, backend: str = "jax", *,
     chunked ring-allreduce COMM tasks (``desc.stamp_multichip``; static
     scheduler only; per-chip outputs are bitwise-identical across
     TP ∈ {1, 2, 4}).  ``step_cache`` shares (cfg, width)-keyed jitted
-    prefill steps across programs.
+    prefill steps across programs.  ``trace=True`` enables the
+    megakernel's heap-resident task trace ring (``Program.trace()``
+    decodes it into an ``obs.TaskTrace``); trace-off programs are
+    bitwise-identical to pre-trace builds.
     """
     if backend not in _BACKEND_CLASSES:
         raise ValueError(
@@ -595,7 +682,8 @@ def compile(cfg, batch: int, max_seq: int, backend: str = "jax", *,
             event_fusion=event_fusion,
             pipeline_depth=pipeline_depth,
             num_workers=num_workers,
-            scheduler=scheduler)
+            scheduler=scheduler,
+            trace=trace)
         return InterpreterProgram(cfg, batch, max_seq, step_cache,
                                   options=opts, tp=tp)
     if backend == "megakernel":
@@ -605,7 +693,7 @@ def compile(cfg, batch: int, max_seq: int, backend: str = "jax", *,
                              event_fusion=event_fusion,
                              pipeline_depth=pipeline_depth,
                              num_workers=num_workers,
-                             scheduler=scheduler, tp=tp)
+                             scheduler=scheduler, tp=tp, trace=trace)
     if tp != 1:
         raise ValueError(f"tp={tp} is only supported on the interpreter "
                          "and megakernel backends")

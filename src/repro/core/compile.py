@@ -60,6 +60,12 @@ class CompileOptions:
     #: the partition survives only as a placement hint
     #: (``runtime/dyn_sched.py``)
     scheduler: str = "static"
+    #: emit the heap-resident per-task trace ring (observability): the
+    #: kernel timestamps every executed task slot with a logical tick
+    #: counter and records worker/task/kind/pop-source/wait-count.  Off
+    #: by default so the descriptor table and heap layout stay bitwise
+    #: identical to the untraced build.
+    trace: bool = False
 
 
 @dataclasses.dataclass

@@ -69,7 +69,7 @@ from .graph import OpKind
 from .schedule import partition_workers, replay_partition
 
 __all__ = ["SimConfig", "SimResult", "simulate", "skewed_time_fn",
-           "ragged_kv_lens"]
+           "ragged_kv_lens", "predicted_timeline"]
 
 
 @dataclasses.dataclass
@@ -180,6 +180,106 @@ def skewed_time_fn(base_fn, kv_lens: Sequence[int]):
     return fn
 
 
+def _mpk_cost_model(compiled: CompiledTGraph, cfg: SimConfig):
+    """The ``(partition, time_fn, wait_fn)`` triple the mpk/mpk_dyn/
+    mpk_tp replays run under (paper §5).  The partition IS the schedule
+    the megakernel executes: static per-worker queues cut out of the
+    linearized order, synchronized by in-heap event counters on the
+    cross-worker edges.  When the compile-time width differs from the
+    simulated one (W sweeps), the same partitioner is re-run at the
+    requested width — never an ad-hoc greedy lane assignment."""
+    tg = compiled.tg
+    part = compiled.partition
+
+    if cfg.mode == "mpk_tp" and cfg.tp > 1:
+        # multi-chip: collectives charge the lockstep ring expansion
+        # (or the whole-tensor baseline), everything else is the
+        # single-chip cost — the repo's TP model keeps global shapes
+        from ..distributed.comm_tasks import (ring_duration,
+                                              serialized_duration)
+
+        def _wire(nbytes):
+            return comm_time(nbytes, ici_bw=cfg.ici_bw,
+                             latency=cfg.comm_latency)
+        coll_fn = (serialized_duration
+                   if cfg.comm_plan == "serialized" else ring_duration)
+
+        def base_time_fn(task, is_stalled):
+            if task.is_comm and not task.is_dummy:
+                span_words = int(task.bytes_moved() // 4)
+                return coll_fn(span_words, cfg.tp, time_fn=_wire)
+            return _task_time(task, cfg, is_stalled)
+    else:
+        def base_time_fn(task, is_stalled):
+            return _task_time(task, cfg, is_stalled)
+
+    def wait_fn(task):
+        return (cfg.jit_hop if task.launch_mode == "jit"
+                else cfg.aot_wait)
+
+    if part is None or part.requested_workers != cfg.n_workers:
+        # the partitioner always balances for the NOMINAL (uniform)
+        # costs — compile time cannot predict runtime raggedness,
+        # which is exactly what mpk vs mpk_dyn measures under skew
+        part = partition_workers(tg, compiled.lin, cfg.n_workers,
+                                 cfg.pipeline_depth,
+                                 time_fn=base_time_fn,
+                                 wait_fn=wait_fn,
+                                 overlap_comm=cfg.overlap_comm,
+                                 n_dma=cfg.n_dma)
+    time_fn = (skewed_time_fn(base_time_fn, cfg.kv_lens)
+               if cfg.kv_lens is not None else base_time_fn)
+    return part, time_fn, wait_fn
+
+
+def predicted_timeline(compiled: CompiledTGraph,
+                       cfg: Optional[SimConfig] = None) -> Dict[str, object]:
+    """The *predicted* per-task timeline of the mpk replays, in one
+    schema: ``{"mode", "makespan", "start", "end", "worker"}`` with
+    ``start``/``end``/``worker`` keyed by task id.  ``mode="mpk"`` (or
+    ``"mpk_tp"``) replays the static partition with
+    :func:`~repro.core.schedule.replay_partition`; ``mode="mpk_dyn"``
+    runs :func:`~repro.runtime.dyn_sched.simulate_dynamic` and converts
+    its descriptor-row keys back to task ids.  The ``obs`` package
+    reconciles this against the kernel's trace ring."""
+    cfg = cfg or SimConfig()
+    if cfg.mode not in ("mpk", "mpk_dyn", "mpk_tp"):
+        raise ValueError(f"predicted_timeline needs an mpk mode, got "
+                         f"{cfg.mode!r}")
+    tg = compiled.tg
+    part, time_fn, wait_fn = _mpk_cost_model(compiled, cfg)
+
+    if cfg.mode == "mpk_dyn":
+        from ..runtime.dyn_sched import build_dyn_sched, simulate_dynamic
+        dyn = build_dyn_sched(compiled, part)
+        tasks = [tg.tasks[tid] for tid in compiled.order]
+        dres = simulate_dynamic(
+            dyn, tasks, time_fn, wait_fn,
+            queue_overhead=cfg.queue_overhead,
+            pipeline_depth=(cfg.pipeline_depth if cfg.pipelined else 1),
+            overlap_comm=cfg.overlap_comm, n_dma=cfg.n_dma)
+        order = compiled.order
+        return {
+            "mode": cfg.mode,
+            "makespan": dres.makespan,
+            "start": {order[r]: t for r, t in dres.start.items()},
+            "end": {order[r]: t for r, t in dres.done.items()},
+            "worker": {order[r]: w for r, w in dres.worker.items()},
+        }
+
+    res = replay_partition(
+        tg, part.queues, part.step_of, time_fn=time_fn, wait_fn=wait_fn,
+        pipeline_depth=cfg.pipeline_depth if cfg.pipelined else 1,
+        overlap_comm=cfg.overlap_comm, n_dma=cfg.n_dma)
+    return {
+        "mode": cfg.mode,
+        "makespan": res.makespan,
+        "start": dict(res.start),
+        "end": dict(res.done),
+        "worker": dict(part.worker_of),
+    }
+
+
 def simulate(compiled: CompiledTGraph,
              cfg: Optional[SimConfig] = None) -> SimResult:
     cfg = cfg or SimConfig()
@@ -216,53 +316,7 @@ def simulate(compiled: CompiledTGraph,
                          len(per_op))
 
     if cfg.mode in ("mpk", "mpk_dyn", "mpk_tp"):
-        # ---- replay the compiler's worker partition (paper §5) ----
-        # The partition IS the schedule the megakernel executes: static
-        # per-worker queues cut out of the linearized order, synchronized
-        # by in-heap event counters on the cross-worker edges.  When the
-        # compile-time width differs from the simulated one (W sweeps),
-        # the same partitioner is re-run at the requested width — never
-        # an ad-hoc greedy lane assignment.
-        part = compiled.partition
-
-        if cfg.mode == "mpk_tp" and cfg.tp > 1:
-            # multi-chip: collectives charge the lockstep ring expansion
-            # (or the whole-tensor baseline), everything else is the
-            # single-chip cost — the repo's TP model keeps global shapes
-            from ..distributed.comm_tasks import (ring_duration,
-                                                  serialized_duration)
-
-            def _wire(nbytes):
-                return comm_time(nbytes, ici_bw=cfg.ici_bw,
-                                 latency=cfg.comm_latency)
-            coll_fn = (serialized_duration
-                       if cfg.comm_plan == "serialized" else ring_duration)
-
-            def base_time_fn(task, is_stalled):
-                if task.is_comm and not task.is_dummy:
-                    span_words = int(task.bytes_moved() // 4)
-                    return coll_fn(span_words, cfg.tp, time_fn=_wire)
-                return _task_time(task, cfg, is_stalled)
-        else:
-            def base_time_fn(task, is_stalled):
-                return _task_time(task, cfg, is_stalled)
-
-        def wait_fn(task):
-            return (cfg.jit_hop if task.launch_mode == "jit"
-                    else cfg.aot_wait)
-
-        if part is None or part.requested_workers != cfg.n_workers:
-            # the partitioner always balances for the NOMINAL (uniform)
-            # costs — compile time cannot predict runtime raggedness,
-            # which is exactly what mpk vs mpk_dyn measures under skew
-            part = partition_workers(tg, compiled.lin, cfg.n_workers,
-                                     cfg.pipeline_depth,
-                                     time_fn=base_time_fn,
-                                     wait_fn=wait_fn,
-                                     overlap_comm=cfg.overlap_comm,
-                                     n_dma=cfg.n_dma)
-        time_fn = (skewed_time_fn(base_time_fn, cfg.kv_lens)
-                   if cfg.kv_lens is not None else base_time_fn)
+        part, time_fn, wait_fn = _mpk_cost_model(compiled, cfg)
         width = max(1, part.num_workers)
 
         if cfg.mode == "mpk_dyn":

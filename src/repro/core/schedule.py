@@ -441,6 +441,9 @@ class ReplayResult:
     busy: List[float]                 # per-worker busy seconds
     done: Dict[int, float]            # task completion times
     stalled: int                      # tasks that lost their prefetch
+    #: task start times (the predicted timeline ``obs`` reconciles
+    #: against the kernel's trace ring)
+    start: Dict[int, float] = dataclasses.field(default_factory=dict)
 
 
 def replay_partition(tg: TGraph, queues: List[List[int]],
@@ -474,6 +477,7 @@ def replay_partition(tg: TGraph, queues: List[List[int]],
     busy = [0.0] * len(queues)
     dma = [0.0] * n_dma
     done: Dict[int, float] = {}
+    starts: Dict[int, float] = {}
     for _s, w, tid in order:
         task = tg.tasks[tid]
         wait = wait_fn(task)
@@ -492,8 +496,9 @@ def replay_partition(tg: TGraph, queues: List[List[int]],
             worker_t[w] = start + dt
             busy[w] += dt
         done[tid] = start + dt
+        starts[tid] = start
     makespan = max(done.values(), default=0.0)
-    return ReplayResult(makespan, busy, done, len(stalled))
+    return ReplayResult(makespan, busy, done, len(stalled), starts)
 
 
 def partition_workers(tg: TGraph, lin: LinearizedTGraph, num_workers: int,

@@ -117,9 +117,9 @@ import numpy as np
 from ...core.compile import CompiledTGraph
 from ...core.graph import OpKind
 
-__all__ = ["KIND_CODES", "DESC_WORDS", "STATS_WORDS", "PER_STEP_INPUTS",
-           "MegakernelPlan", "MegakernelProgram", "lower_tgraph",
-           "stamp_multichip"]
+__all__ = ["KIND_CODES", "DESC_WORDS", "STATS_WORDS", "TRACE_WORDS",
+           "TRACE_HEADER", "PER_STEP_INPUTS", "MegakernelPlan",
+           "MegakernelProgram", "lower_tgraph", "stamp_multichip"]
 
 #: graph inputs that change every decode step — everything else in the heap
 #: (weights, caches, SSM/conv state) is uploaded once and lives on device
@@ -136,6 +136,18 @@ DESC_WORDS = 36
 #: worker's own pool, [9] pops from the shared overflow queue,
 #: [10] steals from other workers' pools, [11] idle grid slots
 STATS_WORDS = 12
+
+#: f32 words PER GRID SLOT in the optional trace ring
+#: (``CompileOptions.trace``): [0] worker lane, [1] descriptor row
+#: (-1 = dynamic idle slot), [2] kind code, [3] logical start tick,
+#: [4] logical end tick, [5] pop source (-1 static / 0 own / 1 overflow
+#: / 2 steal), [6] event-wait trigger count, [7] reserved
+TRACE_WORDS = 8
+
+#: words at the head of the trace ring, before the records: word 0 is
+#: the global logical tick counter the kernel fetch-and-increments; the
+#: rest is padding so records start aligned to ``TRACE_WORDS``
+TRACE_HEADER = 8
 
 KIND_CODES = {
     "noop": 0,
@@ -254,6 +266,11 @@ class MegakernelPlan:
     n_chips: int = 1
     #: words per per-chip tensor region (0 when single-chip)
     chip_stride: int = 0
+    #: trace ring enabled (``CompileOptions.trace``) — the kernel writes
+    #: one ``TRACE_WORDS`` record per grid slot after the stats blocks
+    trace: bool = False
+    #: heap offset of the trace ring (tick header + records); 0 when off
+    ring_offset: int = 0
 
     # ------------------------------------------------- pipeline contract
     def pipeline_stats(self) -> Dict[str, Any]:
@@ -514,7 +531,8 @@ def _build_layout(compiled: CompiledTGraph, tn: int
 
 def lower_tgraph(compiled: CompiledTGraph, cfg,
                  tn: Optional[int] = None,
-                 scheduler: str = "static") -> MegakernelPlan:
+                 scheduler: str = "static",
+                 trace: bool = False) -> MegakernelPlan:
     if scheduler not in ("static", "dynamic"):
         raise ValueError(f"unknown scheduler {scheduler!r}; "
                          "expected 'static' or 'dynamic'")
@@ -778,7 +796,7 @@ def lower_tgraph(compiled: CompiledTGraph, cfg,
 
     if scheduler == "dynamic":
         return _lower_dynamic(compiled, cfg, descs, layout, heap_size,
-                              statics, part)
+                              statics, part, trace)
 
     # ---- scatter the task table onto the (step, worker) grid ----
     W = part.num_workers
@@ -802,9 +820,18 @@ def lower_tgraph(compiled: CompiledTGraph, cfg,
     statics["EVENT_OFF"] = event_offset
     statics["N_EVENTS"] = num_events
     statics["STATS_OFF"] = stats_offset
+    ring_offset = 0
+    if trace:
+        # trace ring strictly after every existing region so the
+        # trace-off layout is bitwise identical
+        ring_offset = heap_size
+        heap_size += TRACE_HEADER + num_steps * W * TRACE_WORDS
+        statics["TRACE"] = 1
+        statics["TR_OFF"] = ring_offset
     return MegakernelPlan(compiled, grid, layout, heap_size, statics,
                           stats_offset, W, num_steps, event_offset,
-                          num_events)
+                          num_events, trace=trace,
+                          ring_offset=ring_offset)
 
 
 #: descriptor words holding absolute heap element offsets, per kind code
@@ -1023,22 +1050,31 @@ def stamp_multichip(plan: MegakernelPlan, n_chips: int) -> MegakernelPlan:
             assert (grid[row - Wt, 24:27] == grid[row, 28:31]).all(), row
 
     stats_off = cursor
+    heap_size = stats_off + STATS_WORDS * Wt
+    statics = dict(plan.statics)
+    ring_off = 0
+    if plan.trace:
+        ring_off = heap_size
+        heap_size += TRACE_HEADER + S * Wt * TRACE_WORDS
+        statics["TRACE"] = 1
+        statics["TR_OFF"] = ring_off
     # +256: the comm span copies run in 256-word masked blocks, so the
     # last block of a span may read (never write) past its end
-    heap_size = stats_off + STATS_WORDS * Wt + 256
-    statics = dict(plan.statics)
+    heap_size += 256
     statics.update({"W": Wt, "NUM_STEPS": S, "EVENT_OFF": event_off,
                     "N_EVENTS": C * nev0 + n_comm_ev,
                     "STATS_OFF": stats_off, "N_CHIPS": C})
     return MegakernelPlan(plan.compiled, grid, plan.layout, heap_size,
                           statics, stats_off, Wt, S, event_off,
                           C * nev0 + n_comm_ev, n_chips=C,
-                          chip_stride=chip_stride)
+                          chip_stride=chip_stride, trace=plan.trace,
+                          ring_offset=ring_off)
 
 
 def _lower_dynamic(compiled: CompiledTGraph, cfg, descs: np.ndarray,
                    layout: Dict[str, TensorSlot], heap_size: int,
-                   statics: Dict[str, Any], part) -> MegakernelPlan:
+                   statics: Dict[str, Any], part,
+                   trace: bool = False) -> MegakernelPlan:
     """Finish the lowering for ``scheduler="dynamic"``: keep the flat
     per-task table in linearized order (row id == lin position — the pop
     priority), stamp every row's event wait/signal words + affinity, and
@@ -1075,6 +1111,10 @@ def _lower_dynamic(compiled: CompiledTGraph, cfg, descs: np.ndarray,
     heap_size += num_steps * W
     stats_offset = heap_size
     heap_size += STATS_WORDS * W
+    ring_offset = 0
+    if trace:
+        ring_offset = heap_size
+        heap_size += TRACE_HEADER + num_steps * W * TRACE_WORDS
 
     statics.update({
         "W": W, "NUM_STEPS": num_steps, "EVENT_OFF": event_offset,
@@ -1084,8 +1124,12 @@ def _lower_dynamic(compiled: CompiledTGraph, cfg, descs: np.ndarray,
         "TRACE_OFF": trace_offset, "T_TASKS": T,
         "MAX_OUT": dyn.max_out,
     })
+    if trace:
+        statics["TRACE"] = 1
+        statics["TR_OFF"] = ring_offset
     return MegakernelPlan(compiled, descs, layout, heap_size, statics,
                           stats_offset, W, num_steps, event_offset,
                           dyn.num_events, scheduler="dynamic", dyn=dyn,
                           queue_offset=queue_offset, qc_offset=qc_offset,
-                          trace_offset=trace_offset)
+                          trace_offset=trace_offset, trace=trace,
+                          ring_offset=ring_offset)

@@ -95,7 +95,7 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from ...runtime.dyn_sched import QUEUE_EMPTY
-from .desc import DESC_WORDS, STATS_WORDS
+from .desc import DESC_WORDS, STATS_WORDS, TRACE_HEADER, TRACE_WORDS
 
 __all__ = ["make_megakernel", "make_count", "COMM_BLOCK"]
 
@@ -174,8 +174,12 @@ def make_megakernel(statics: Dict[str, Any], num_steps: int,
     #: interpret CI always runs the fused transport (N_CHIPS regions in
     #: one heap), which executes the identical task table.
     RDMA = bool(statics.get("REMOTE_DMA", 0))
+    TRACE = bool(statics.get("TRACE", 0))
+    TR_OFF = statics.get("TR_OFF", 0)
 
     def kernel(desc, *rest):
+        rest = list(rest)
+        sT = rest.pop() if TRACE else None   # trace-record staging
         if DYN:
             (sched, heap_in, heap, sA, sB, sC, sD, acc, acc2, sP, sE,
              cnt, sR, sem, psem, rsend, rrecv, sQ, sS) = rest
@@ -489,6 +493,27 @@ def make_megakernel(statics: Dict[str, Any], num_steps: int,
             popped = None
             t = s * W + w_id            # row in the static grid
         d = lambda i: desc[t, i]
+
+        # ------------------- trace ring (CompileOptions.trace) ---------
+        # Logical clock: one in-heap tick word at TR_OFF, fetch-and-
+        # incremented at slot start and slot end (exact under the
+        # sequential interpret grid; on parallel hardware this is a
+        # global atomic).  sT column 7 doubles as the RMW staging word
+        # and is zeroed before the record store.
+        if TRACE:
+            def _tick(col):
+                cpi = pltpu.make_async_copy(
+                    heap.at[pl.ds(TR_OFF, 1)],
+                    sT.at[0, pl.ds(col, 1)], sem)
+                cpi.start()
+                cpi.wait()
+                sT[0, pl.ds(7, 1)] = sT[0, pl.ds(col, 1)] + 1.0
+                cpo = pltpu.make_async_copy(
+                    sT.at[0, pl.ds(7, 1)],
+                    heap.at[pl.ds(TR_OFF, 1)], sem)
+                cpo.start()
+                cpo.wait()
+            _tick(3)                    # record word 3: start tick
 
         # ------------------------------------------------ prefetch phase
         # (static scheduler only: the dynamic scheduler cannot know a
@@ -1069,6 +1094,36 @@ def make_megakernel(statics: Dict[str, Any], num_steps: int,
                         return 0
                     jax.lax.fori_loop(0, MAX_OUT, push_body, 0)
 
+        # ------------------- trace ring: assemble + store the record ---
+        # Every grid slot writes its full TRACE_WORDS record (static
+        # noops record kind 0; dynamic idle slots record row/kind -1) so
+        # no stale data from a previous launch survives in the ring.
+        if TRACE:
+            _tick(4)                    # record word 4: end tick
+            sT[0, pl.ds(0, 1)] = w_id.astype(jnp.float32).reshape(1)
+            if DYN:
+                sT[0, pl.ds(1, 1)] = jnp.where(
+                    popped, t.astype(jnp.float32), -1.0).reshape(1)
+                sT[0, pl.ds(2, 1)] = jnp.where(
+                    popped, d(0).astype(jnp.float32), -1.0).reshape(1)
+                sT[0, pl.ds(5, 1)] = sS[0].astype(
+                    jnp.float32).reshape(1)
+            else:
+                sT[0, pl.ds(1, 1)] = t.astype(jnp.float32).reshape(1)
+                sT[0, pl.ds(2, 1)] = d(0).astype(jnp.float32).reshape(1)
+                sT[0, pl.ds(5, 1)] = jnp.full((1,), -1.0, jnp.float32)
+            sT[0, pl.ds(6, 1)] = jnp.where(
+                _gate(d(32) >= 0), d(33).astype(jnp.float32),
+                0.0).reshape(1)
+            sT[0, pl.ds(7, 1)] = jnp.zeros((1,), jnp.float32)
+            cpr = pltpu.make_async_copy(
+                sT.at[0, pl.ds(0, TRACE_WORDS)],
+                heap.at[pl.ds(TR_OFF + TRACE_HEADER
+                              + (s * W + w_id) * TRACE_WORDS,
+                              TRACE_WORDS)], sem)
+            cpr.start()
+            cpr.wait()
+
         # flush the per-worker counter blocks to their reserved heap
         # slots — only the final grid iteration: the totals accumulate in
         # scratch and nothing reads the heap copy mid-launch
@@ -1104,6 +1159,10 @@ def make_megakernel(statics: Dict[str, Any], num_steps: int,
         scratch_shapes += [
             pltpu.VMEM((OV_ROWS, QCAP), jnp.float32),  # sQ (pool scans)
             pltpu.SMEM((8,), jnp.int32),               # sS (pop state)
+        ]
+    if TRACE:
+        scratch_shapes += [
+            pltpu.VMEM((1, TRACE_WORDS), jnp.float32),  # sT (trace rec)
         ]
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2 if DYN else 1,

@@ -35,10 +35,52 @@ import numpy as np
 from ...core.compile import CompileOptions, megakernelize
 from ...core.decompose import DecomposeConfig
 from ...core.lowering import build_decode_graph
-from .desc import MegakernelPlan, lower_tgraph, stamp_multichip
+from .desc import (STATS_WORDS, TRACE_HEADER, TRACE_WORDS, MegakernelPlan,
+                   lower_tgraph, stamp_multichip)
 from .kernel import make_megakernel
 
-__all__ = ["compile_decode_megakernel", "MegakernelExecutor"]
+__all__ = ["compile_decode_megakernel", "MegakernelExecutor",
+           "STATS_FIELDS", "decode_stats_row", "read_stats_block"]
+
+#: named field map of the per-worker STATS block: counter name → word
+#: index.  Word 4 (``ROW_SPILL_WORD``) is the 2^20-unit spill of
+#: ``row_copies`` — folded back into that field by ``decode_stats_row``
+#: instead of surfacing as its own counter.
+STATS_FIELDS = {
+    "bulk_copies": 0,
+    "row_copies": 1,
+    "prefetch_tiles": 2,
+    "primary_fallbacks": 3,
+    "event_waits": 5,
+    "event_wait_violations": 6,
+    "event_signals": 7,
+    "pops_own": 8,
+    "pops_overflow": 9,
+    "steals": 10,
+    "idle_slots": 11,
+}
+
+ROW_SPILL_WORD = 4
+ROW_SPILL_UNIT = 1 << 20
+
+
+def decode_stats_row(v) -> Dict[str, int]:
+    """Decode one worker's STATS block (``STATS_WORDS`` f32 words) into
+    named integer counters, folding the 2^20-unit ``row_copies`` spill
+    word back in so values far past 2^24 rows/launch stay exact."""
+    out = {name: int(v[i]) for name, i in STATS_FIELDS.items()}
+    out["row_copies"] += ROW_SPILL_UNIT * int(v[ROW_SPILL_WORD])
+    return out
+
+
+def read_stats_block(heap, stats_offset: int,
+                     num_workers: int) -> List[Dict[str, int]]:
+    """Read + decode the per-worker STATS blocks from a heap (array or
+    device buffer): one named-counter dict per worker lane."""
+    flat = np.asarray(
+        heap[stats_offset : stats_offset + num_workers * STATS_WORDS])
+    return [decode_stats_row(flat[w * STATS_WORDS : (w + 1) * STATS_WORDS])
+            for w in range(num_workers)]
 
 
 def compile_decode_megakernel(cfg, batch: int, max_seq: int,
@@ -48,7 +90,8 @@ def compile_decode_megakernel(cfg, batch: int, max_seq: int,
                               pipeline_depth: int = 2,
                               num_workers: int = 1,
                               scheduler: str = "static",
-                              tp: int = 1
+                              tp: int = 1,
+                              trace: bool = False
                               ) -> MegakernelPlan:
     """Lower cfg's decode step end-to-end: op graph → tGraph → descriptors.
 
@@ -66,6 +109,9 @@ def compile_decode_megakernel(cfg, batch: int, max_seq: int,
     run as in-kernel COMM tasks (static scheduler only for now — the
     dynamic scheduler's ready queues are per-chip-heap state that the
     stamper does not replicate yet).
+    ``trace=True`` appends the per-task trace ring to the heap and makes
+    the kernel timestamp every executed slot (``obs`` decodes it); off,
+    the layout and outputs are bitwise identical to the untraced build.
     """
     if tp > 1 and scheduler != "static":
         raise NotImplementedError(
@@ -79,9 +125,10 @@ def compile_decode_megakernel(cfg, batch: int, max_seq: int,
         pipeline_depth=pipeline_depth,
         num_workers=num_workers,
         scheduler=scheduler,
+        trace=trace,
     )
     compiled = megakernelize(g, opts)
-    plan = lower_tgraph(compiled, cfg, scheduler=scheduler)
+    plan = lower_tgraph(compiled, cfg, scheduler=scheduler, trace=trace)
     if tp > 1:
         plan = stamp_multichip(plan, tp)
     return plan
@@ -144,6 +191,12 @@ class MegakernelExecutor:
                 plan.queue_offset,
                 plan.queue_offset + self._queue_reset.size))
             self._sched = jnp.asarray(plan.dyn.sched_table())
+        # trace ring: only the logical tick counter at the ring head
+        # needs re-zeroing — the kernel rewrites every record slot each
+        # launch (idle/noop slots included)
+        if plan.trace:
+            idx_parts.append(np.arange(plan.ring_offset,
+                                       plan.ring_offset + 1))
         self._upd_idx = jnp.asarray(
             np.concatenate(idx_parts).astype(np.int32))
         self._descs = jnp.asarray(plan.descs)
@@ -237,6 +290,8 @@ class MegakernelExecutor:
             flat.append(np.zeros((self._n_events,), np.float32))
         if self._dynamic:
             flat.append(self._queue_reset)
+        if self.plan.trace:
+            flat.append(np.zeros((1,), np.float32))   # tick counter
         return jnp.asarray(np.concatenate(flat))
 
     # ------------------------------------------------------------- public
@@ -273,27 +328,8 @@ class MegakernelExecutor:
         checked, event-wait violations (a compiler bug if nonzero) and
         event signals."""
         assert self._heap is not None, "upload() before worker_counters()"
-        off = self.plan.stats_offset
-        W = self.plan.num_workers
-        from .desc import STATS_WORDS
-        flat = np.asarray(self._heap[off : off + W * STATS_WORDS])
-        out: List[Dict[str, int]] = []
-        for w in range(W):
-            v = flat[w * STATS_WORDS : (w + 1) * STATS_WORDS]
-            out.append({
-                "bulk_copies": int(v[0]),
-                "row_copies": int(v[1]) + (1 << 20) * int(v[4]),
-                "prefetch_tiles": int(v[2]),
-                "primary_fallbacks": int(v[3]),
-                "event_waits": int(v[5]),
-                "event_wait_violations": int(v[6]),
-                "event_signals": int(v[7]),
-                "pops_own": int(v[8]),
-                "pops_overflow": int(v[9]),
-                "steals": int(v[10]),
-                "idle_slots": int(v[11]),
-            })
-        return out
+        return read_stats_block(self._heap, self.plan.stats_offset,
+                                self.plan.num_workers)
 
     def pipeline_counters(self) -> Dict[str, int]:
         """Kernel counters for the LAST step summed over the worker
@@ -303,11 +339,7 @@ class MegakernelExecutor:
         issued, primary tiles demand-loaded (pipeline misses), plus the
         event-counter traffic of the W-worker runtime."""
         per_worker = self.worker_counters()
-        keys = ("bulk_copies", "row_copies", "prefetch_tiles",
-                "primary_fallbacks", "event_waits",
-                "event_wait_violations", "event_signals",
-                "pops_own", "pops_overflow", "steals", "idle_slots")
-        return {k: sum(d[k] for d in per_worker) for k in keys}
+        return {k: sum(d[k] for d in per_worker) for k in STATS_FIELDS}
 
     def scheduler_counters(self) -> Dict[str, Any]:
         """Dynamic-scheduler queue accounting for the LAST step, read
@@ -343,6 +375,18 @@ class MegakernelExecutor:
         n = self.plan.num_steps * self.plan.num_workers
         tr = np.asarray(self._heap[off : off + n])
         return np.where(tr >= QUEUE_EMPTY / 2, -1, tr).astype(np.int64)
+
+    def task_ring(self) -> np.ndarray:
+        """Raw trace-ring records for the LAST step: an
+        ``(num_steps * num_workers, TRACE_WORDS)`` f32 array in grid-slot
+        order (see ``desc.TRACE_WORDS`` for the record schema).  The
+        ``obs`` package decodes this into a typed ``TaskTrace``."""
+        assert self.plan.trace, "plan compiled without trace=True"
+        assert self._heap is not None, "upload() before task_ring()"
+        off = self.plan.ring_offset + TRACE_HEADER
+        n = self.plan.num_steps * self.plan.num_workers
+        flat = np.asarray(self._heap[off : off + n * TRACE_WORDS])
+        return flat.reshape(n, TRACE_WORDS)
 
     def read_heap(self) -> np.ndarray:
         """Host copy of the resident heap (state inspection / snapshots)."""

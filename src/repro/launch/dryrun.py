@@ -28,7 +28,8 @@ import numpy as np
 
 
 def program_stats(arch: str, shape, num_workers: int = 4,
-                  scheduler: str = "static") -> dict:
+                  scheduler: str = "static",
+                  trace_prefix: Path | None = None) -> dict:
     """Compiler-side Program stats for a cell (``repro.api`` interpreter
     backend — no execution): task/event counts, the liveness-packed
     workspace footprint, and the W-worker runtime contract
@@ -70,13 +71,25 @@ def program_stats(arch: str, shape, num_workers: int = 4,
             "pops_overflow": ws["replay_pops_overflow"],
             "steals": ws["replay_steals"],
         })
+    if trace_prefix is not None:
+        # compile-only cell: the dumpable timeline is the PREDICTED one
+        from repro.obs import write_chrome_trace
+
+        tl = prog.predicted_trace()
+        write_chrome_trace(tl, f"{trace_prefix}.trace.json")
+        Path(f"{trace_prefix}.snapshot.json").write_text(
+            json.dumps(prog.metrics_snapshot(), indent=2))
+        rec["trace_json"] = f"{trace_prefix}.trace.json"
+        rec["predicted_makespan_s"] = tl.meta["makespan"]
+        rec["trace_events"] = len(tl.events)
     return rec
 
 
 def run_cell(arch: str, shape_name: str, multi_pod: bool,
              out_dir: Path, microbatches: int = 1,
              dump_hlo: bool = False, overrides: dict | None = None,
-             with_program_stats: bool = False) -> dict:
+             with_program_stats: bool = False,
+             with_program_trace: bool = False) -> dict:
     # late imports: jax device count must be pinned first
     from repro.configs import SHAPES, get_config
     from repro.launch.mesh import make_production_mesh
@@ -100,7 +113,9 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
         rec["program"] = program_stats(
             arch, shape,
             num_workers=(overrides or {}).get("program_workers", 4),
-            scheduler=(overrides or {}).get("program_scheduler", "static"))
+            scheduler=(overrides or {}).get("program_scheduler", "static"),
+            trace_prefix=(out_dir / f"{arch}_{shape_name}_{mesh_tag}"
+                          if with_program_trace else None))
 
     mesh = make_production_mesh(multi_pod=multi_pod)
     chips = int(np.prod(list(mesh.shape.values())))
@@ -254,6 +269,11 @@ def main() -> int:
                     default="static",
                     help="runtime scheduler for --program-stats (dynamic "
                          "adds ready-queue depth / pop-source stats)")
+    ap.add_argument("--program-trace", action="store_true",
+                    help="with --program-stats: also write the predicted "
+                         "task timeline (<cell>.trace.json, Chrome-trace "
+                         "format) and the metrics snapshot "
+                         "(<cell>.snapshot.json) per cell")
     args = ap.parse_args()
     overrides = {}
     if args.no_sp:
@@ -293,7 +313,9 @@ def main() -> int:
                                    microbatches=args.microbatches,
                                    dump_hlo=args.dump_hlo,
                                    overrides=overrides or None,
-                                   with_program_stats=args.program_stats)
+                                   with_program_stats=(args.program_stats
+                                                       or args.program_trace),
+                                   with_program_trace=args.program_trace)
                 except Exception as e:
                     rec = {"arch": arch, "shape": shape,
                            "mesh": "multipod" if mp else "pod",

@@ -15,6 +15,7 @@ every backend and asserts logits parity.
 from __future__ import annotations
 
 import argparse
+import json
 import time
 from typing import List, Optional
 
@@ -102,6 +103,15 @@ def main() -> None:
                     help="pre-compile all jit step widths on a throwaway "
                          "engine so the reported TTFT/TPOT measure the "
                          "schedule, not XLA compile time")
+    ap.add_argument("--metrics-json", default=None, metavar="PATH",
+                    help="dump the unified metrics snapshot (program + "
+                         "compiler + pipeline + workers + serving) as "
+                         "JSON to PATH")
+    ap.add_argument("--trace-json", default=None, metavar="PATH",
+                    help="dump the task timeline as Chrome-trace JSON to "
+                         "PATH (megakernel backend: compiles with "
+                         "trace=True and exports the kernel's heap ring; "
+                         "other backends export their own timeline)")
     ap.add_argument("--crosscheck", "--megakernel", dest="crosscheck",
                     action="store_true",
                     help="decode a batch through every backend and assert "
@@ -127,7 +137,8 @@ def main() -> None:
                           backend=args.backend,
                           num_workers=args.workers,
                           scheduler=args.scheduler,
-                          step_cache=step_cache).bind(params)
+                          step_cache=step_cache,
+                          trace=args.trace_json is not None).bind(params)
     if args.warmup:
         warm = poisson_workload(np.random.default_rng(args.seed),
                                 args.requests, args.prompt_len,
@@ -191,6 +202,23 @@ def main() -> None:
     print(f"[serve] preemptions: {int(summary['preemptions'])}")
     for r in done[:3]:
         print(f"  req {r.request_id}: {r.output[:8]}...")
+
+    if args.metrics_json:
+        with open(args.metrics_json, "w") as fh:
+            json.dump(engine.metrics_snapshot(), fh, indent=2)
+        print(f"[serve] metrics snapshot -> {args.metrics_json}")
+    if args.trace_json:
+        from repro.obs import write_chrome_trace
+
+        prog = engine.program
+        try:
+            tl = prog.trace()   # kernel ring / interpreter timeline
+        except ValueError:
+            tl = prog.predicted_trace()  # e.g. no in-kernel decode step
+        write_chrome_trace(tl, args.trace_json)
+        print(f"[serve] {tl.origin} task timeline "
+              f"({len(tl.events)} events) -> {args.trace_json} "
+              f"(open at https://ui.perfetto.dev)")
 
     if args.crosscheck:
         from repro.api import BACKENDS, compile as mpk_compile

@@ -1,0 +1,22 @@
+"""Observability: typed task timelines, Perfetto export, reconciliation.
+
+The megakernel's trace ring (``CompileOptions.trace``) records one
+``desc.TRACE_WORDS`` record per executed grid slot; this package decodes
+it into a :class:`TaskTrace`, emits the *predicted* timeline from the
+compiler's replays in the same schema, exports Chrome-trace JSON that
+Perfetto (https://ui.perfetto.dev) loads directly, and reconciles
+predicted vs observed timelines into per-task / per-kind skew reports —
+the measurement layer the autotuner's cost oracle is validated against.
+"""
+from .perfetto import chrome_trace, validate_chrome_trace, write_chrome_trace
+from .reconcile import ReconcileReport, reconcile
+from .trace import (KIND_NAMES, TaskEvent, TaskTrace, check_event_order,
+                    decode_ring, predicted_task_trace, sequential_trace)
+
+__all__ = [
+    "TaskEvent", "TaskTrace", "KIND_NAMES",
+    "decode_ring", "sequential_trace", "predicted_task_trace",
+    "check_event_order",
+    "chrome_trace", "validate_chrome_trace", "write_chrome_trace",
+    "reconcile", "ReconcileReport",
+]

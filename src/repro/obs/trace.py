@@ -1,0 +1,251 @@
+"""Typed task timelines: the one schema every producer emits.
+
+Three producers fill the same :class:`TaskTrace`:
+
+* :func:`decode_ring` — the megakernel's heap-resident trace ring
+  (``MegakernelExecutor.task_ring()``), the *observed* timeline in
+  logical ticks (two global fetch-and-increment ticks per grid slot),
+* :func:`sequential_trace` — the interpreter backend's sequential
+  execution, emitted on the same two-ticks-per-slot clock so the two
+  in-process backends are directly comparable,
+* :func:`predicted_task_trace` — the compiler's replay
+  (:func:`~repro.core.runtime_sim.predicted_timeline`) in roofline
+  seconds.
+
+``reconcile`` (``obs/reconcile.py``) compares any two of them;
+``chrome_trace`` (``obs/perfetto.py``) exports any of them.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional
+
+import numpy as np
+
+from ..kernels.megakernel.desc import KIND_CODES, TRACE_WORDS
+
+#: kind code -> short human name (the Chrome-trace event names); OpKind
+#: values are plain strings, so the reverse map is direct (first name
+#: wins where codes are shared, e.g. residual_add/elementwise)
+KIND_NAMES: Dict[int, str] = {}
+for _k, _v in KIND_CODES.items():
+    KIND_NAMES.setdefault(_v, str(_k))
+
+__all__ = ["TaskEvent", "TaskTrace", "KIND_NAMES", "decode_ring",
+           "sequential_trace", "predicted_task_trace",
+           "check_event_order"]
+
+
+@dataclasses.dataclass
+class TaskEvent:
+    """One executed task: half-open interval [start, end) on a worker."""
+
+    task: int          # tGraph task id (-1 when unmapped, e.g. noop pads)
+    row: int           # descriptor row / grid slot the kernel executed
+    worker: int        # worker lane
+    kind: int          # kind code (desc.KIND_CODES)
+    name: str          # human name ("matmul", "attention_decode", ...)
+    start: float       # ticks (observed) or seconds (predicted)
+    end: float
+    source: int = -1   # pop source: -1 static, 0 own, 1 overflow, 2 steal
+    wait_cnt: int = 0  # event-wait trigger count (0 = no wait word)
+    chip: int = 0      # chip of a stamped multichip plan
+    wait_ev: int = -1  # descriptor wait-event id (word 32)
+    sig_ev: int = -1   # descriptor signal-event id (word 34)
+
+
+@dataclasses.dataclass
+class TaskTrace:
+    """A full timeline: events plus enough context to export/reconcile."""
+
+    origin: str                    # "kernel" | "interpreter" | "predicted"
+    scheduler: str                 # "static" | "dynamic"
+    num_workers: int
+    events: List[TaskEvent]
+    n_chips: int = 1
+    meta: Dict[str, Any] = dataclasses.field(default_factory=dict)
+
+    @property
+    def makespan(self) -> float:
+        return max((e.end for e in self.events), default=0.0)
+
+    def by_task(self) -> Dict[int, TaskEvent]:
+        return {e.task: e for e in self.events if e.task >= 0}
+
+
+def _live_slots(ring: np.ndarray, descs) -> np.ndarray:
+    """Rows of a raw task ring worth decoding: every slot that computed
+    (kind > 0) or synchronized (a wait or signal word on its descriptor
+    — dummy tasks carry the compiler's start/final events, and dropping
+    them would make the event-order check miss their signals).  Dynamic
+    idle pad slots (row -1) and silent static noop pads are skipped."""
+    rows = ring[:, 1].astype(np.int64)
+    live = rows >= 0
+    idx = np.clip(rows, 0, len(descs) - 1)
+    synced = (descs[idx, 32] >= 0) | (descs[idx, 34] >= 0)
+    return live & ((ring[:, 2] > 0) | synced)
+
+
+def decode_ring(plan, ring: np.ndarray) -> TaskTrace:
+    """Decode a raw ``task_ring()`` array against its plan into the
+    observed :class:`TaskTrace` (times are logical ticks).
+
+    The ring's row word is the *descriptor row*: under the dynamic
+    scheduler that is the linearized position (task id =
+    ``compiled.order[row]``); under the static scheduler the grid slot
+    maps back through the worker partition.  Stamped multichip grids
+    (COMM tasks, per-chip mirrors) carry no single task id — those
+    events keep ``task=-1`` and are matched by row instead."""
+    assert ring.ndim == 2 and ring.shape[1] == TRACE_WORDS
+    W = plan.num_workers
+    n_chips = max(1, plan.n_chips)
+    w_per_chip = max(1, W // n_chips)
+
+    row_tid: Dict[int, int] = {}
+    if plan.scheduler == "dynamic":
+        order = plan.compiled.order
+        row_tid = {r: order[r] for r in range(len(order))}
+    elif n_chips == 1:
+        part = plan.compiled.partition
+        if part is not None:
+            row_tid = {part.step_of[t] * W + part.worker_of[t]: t
+                       for t in part.step_of}
+
+    events: List[TaskEvent] = []
+    for i in np.nonzero(_live_slots(ring, plan.descs))[0]:
+        rec = ring[i]
+        row = int(rec[1])
+        kind = int(rec[2])
+        worker = int(rec[0])
+        d = plan.descs[row]
+        events.append(TaskEvent(
+            task=row_tid.get(row, -1),
+            row=row,
+            worker=worker,
+            kind=kind,
+            name=KIND_NAMES.get(kind, f"kind{kind}"),
+            start=float(rec[3]),
+            end=float(rec[4]),
+            source=int(rec[5]),
+            wait_cnt=int(rec[6]),
+            chip=worker // w_per_chip,
+            wait_ev=int(d[32]),
+            sig_ev=int(d[34]),
+        ))
+    return TaskTrace(
+        origin="kernel", scheduler=plan.scheduler, num_workers=W,
+        events=events, n_chips=n_chips,
+        meta={"num_steps": plan.num_steps,
+              "ring_slots": int(ring.shape[0]),
+              "time_unit": "tick"})
+
+
+def sequential_trace(compiled, scheduler: str = "static",
+                     seq=None) -> TaskTrace:
+    """The interpreter backend's timeline, on the SAME two-ticks-per-
+    task clock the kernel ring uses (task *i* of the sequential
+    execution spans [2i, 2i+1)).
+
+    Static: the interpreter walks ``compiled.order`` but each task still
+    *belongs* to its partition lane, so worker comes from the partition.
+    Dynamic: ``seq`` is the :class:`~repro.runtime.dyn_sched.SeqTrace`
+    of the protocol replay (pop order, lanes, sources)."""
+    tg = compiled.tg
+    part = compiled.partition
+
+    def _ev(i, tid, worker, source=-1):
+        task = tg.tasks[tid]
+        kind = KIND_CODES.get("noop" if task.is_dummy else task.kind, 0)
+        return TaskEvent(
+            task=tid, row=i, worker=worker, kind=kind,
+            name=KIND_NAMES.get(kind, f"kind{kind}"),
+            start=float(2 * i), end=float(2 * i + 1), source=source)
+
+    events: List[TaskEvent] = []
+    if scheduler == "dynamic" and seq is not None:
+        src_code = {"own": 0, "overflow": 1, "steal": 2}
+        order = compiled.order
+        for i, (row, w, src) in enumerate(zip(seq.order, seq.worker,
+                                              seq.source)):
+            events.append(_ev(i, order[row], w, src_code.get(src, -1)))
+        W = max(seq.worker, default=0) + 1 if seq.worker else 1
+    else:
+        worker_of = part.worker_of if part is not None else {}
+        for i, tid in enumerate(compiled.order):
+            events.append(_ev(i, tid, int(worker_of.get(tid, 0))))
+        W = part.num_workers if part is not None else 1
+    return TaskTrace(origin="interpreter", scheduler=scheduler,
+                     num_workers=W, events=events,
+                     meta={"time_unit": "tick"})
+
+
+def predicted_task_trace(compiled, scheduler: str = "static",
+                         *, num_workers: Optional[int] = None,
+                         pipeline_depth: int = 2,
+                         tp: int = 1, **sim_kw) -> TaskTrace:
+    """The compiler's *predicted* timeline as a :class:`TaskTrace`
+    (times in roofline seconds): ``replay_partition`` for the static
+    scheduler, ``simulate_dynamic`` for the dynamic one, through
+    :func:`~repro.core.runtime_sim.predicted_timeline` so the costs are
+    exactly the ones ``runtime_sim.simulate`` charges."""
+    from ..core.runtime_sim import SimConfig, predicted_timeline
+
+    part = compiled.partition
+    W = num_workers or (part.requested_workers if part is not None else 1)
+    mode = "mpk_dyn" if scheduler == "dynamic" else (
+        "mpk_tp" if tp > 1 else "mpk")
+    cfg = SimConfig(mode=mode, n_workers=W,
+                    pipeline_depth=pipeline_depth, tp=tp, **sim_kw)
+    tl = predicted_timeline(compiled, cfg)
+
+    tg = compiled.tg
+    events: List[TaskEvent] = []
+    pos = {tid: i for i, tid in enumerate(compiled.order)}
+    for tid, t0 in tl["start"].items():
+        task = tg.tasks[tid]
+        kind = KIND_CODES.get("noop" if task.is_dummy else task.kind, 0)
+        events.append(TaskEvent(
+            task=tid, row=pos.get(tid, -1),
+            worker=int(tl["worker"].get(tid, 0)), kind=kind,
+            name=KIND_NAMES.get(kind, f"kind{kind}"),
+            start=float(t0), end=float(tl["end"][tid])))
+    events.sort(key=lambda e: (e.start, e.worker, e.task))
+    return TaskTrace(origin="predicted", scheduler=scheduler,
+                     num_workers=W, events=events,
+                     meta={"mode": tl["mode"],
+                           "makespan": float(tl["makespan"]),
+                           "time_unit": "s"})
+
+
+def check_event_order(trace: TaskTrace, plan=None) -> List[str]:
+    """Validate a timeline against the descriptor event-counter
+    semantics; returns a list of violation strings (empty = consistent).
+
+    * every waiter on event *e* must start at/after the end of every
+      signaler of *e* (the counter can only have reached the trigger
+      count once all signals landed),
+    * a waiter's recorded trigger count must equal the number of
+      signalers of its event.
+
+    Needs wait/sig event ids on the events — i.e. a kernel-ring trace
+    (:func:`decode_ring` fills them from the descriptor table)."""
+    problems: List[str] = []
+    signalers: Dict[int, List[TaskEvent]] = {}
+    for e in trace.events:
+        if e.sig_ev >= 0:
+            signalers.setdefault(e.sig_ev, []).append(e)
+    for e in trace.events:
+        if e.wait_ev < 0:
+            continue
+        sigs = signalers.get(e.wait_ev, [])
+        for s in sigs:
+            if s.end > e.start:
+                problems.append(
+                    f"event {e.wait_ev}: waiter row {e.row} starts at "
+                    f"{e.start} before signaler row {s.row} ends at "
+                    f"{s.end}")
+        if e.wait_cnt and e.wait_cnt != len(sigs):
+            problems.append(
+                f"event {e.wait_ev}: waiter row {e.row} expects "
+                f"{e.wait_cnt} signals, trace has {len(sigs)} signalers")
+    return problems

@@ -377,6 +377,11 @@ class DynSimResult:
     pops_overflow: int
     steals: int
     max_depth: List[int]
+    #: row -> start time (the predicted timeline ``obs`` reconciles
+    #: against the kernel's trace ring)
+    start: Dict[int, float] = dataclasses.field(default_factory=dict)
+    #: row -> worker lane that popped it
+    worker: Dict[int, int] = dataclasses.field(default_factory=dict)
 
 
 def simulate_dynamic(plan: DynSchedPlan, tasks: Sequence,
@@ -468,6 +473,7 @@ def simulate_dynamic(plan: DynSchedPlan, tasks: Sequence,
     done: Dict[int, float] = {}
     popper: Dict[int, int] = {}
     pop_seq: Dict[int, int] = {}
+    starts: Dict[int, float] = {}
     n_done = 0
     while n_done < plan.num_tasks:
         t, w = heapq.heappop(clock)
@@ -521,6 +527,7 @@ def simulate_dynamic(plan: DynSchedPlan, tasks: Sequence,
             end = start + dt
             busy[w] += dt
         done[row] = end
+        starts[row] = start
         popper[row] = w
         pop_seq[row] = n_done
         n_done += 1
@@ -536,4 +543,5 @@ def simulate_dynamic(plan: DynSchedPlan, tasks: Sequence,
             clock, (t if task.is_comm and overlap_comm else end, w))
     makespan = max(done.values(), default=0.0)
     return DynSimResult(makespan, busy, done, q.pops_own,
-                        q.pops_overflow, q.steals, list(q.max_depth))
+                        q.pops_overflow, q.steals, list(q.max_depth),
+                        starts, dict(popper))
